@@ -1,0 +1,56 @@
+"""Paper Fig. 12: {n CN, m MN} design-space grid for RM1.V0 — throughput,
+power, allocated nodes, normalized TCO; diagonal = monolithic scale-out."""
+from __future__ import annotations
+
+from repro.configs import rm1
+from repro.core import allocator
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+from benchmarks.common import row
+
+PEAK_LOAD = 2e5  # samples/s fleet load
+
+
+def run() -> dict:
+    m = rm1.generation(0)
+    out = {"grid": {}}
+
+    # diagonal: monolithic SO-1S scale-out (2, 4, 8 servers)
+    base_tco = None
+    for n in (2, 4, 8):
+        u = UnitSpec(n, "so1s_1g", scheme="distributed")
+        sm = ServingUnitModel(m, u)
+        if not sm.fits():
+            continue
+        plan = allocator.allocate_from_model(m, u, PEAK_LOAD)
+        if base_tco is None:
+            base_tco = plan.tco
+        out["grid"][f"mono_{n}"] = (plan.qps_per_unit, plan.tco)
+        row(f"fig12_mono_so1s_x{n}_qps", plan.qps_per_unit,
+            f"tco_norm={plan.tco / base_tco:.2f}")
+
+    # 2D disaggregated grid
+    best = None
+    for n in (1, 2, 3, 4, 6, 8):
+        for mm in (2, 4, 8, 12, 16):
+            u = UnitSpec(n, "cn_1g", mm, "ddr_mn")
+            sm = ServingUnitModel(m, u)
+            if not sm.fits():
+                continue
+            try:
+                plan = allocator.allocate_from_model(m, u, PEAK_LOAD)
+            except ValueError:
+                continue
+            out["grid"][f"disagg_{n}_{mm}"] = (plan.qps_per_unit, plan.tco)
+            if best is None or plan.tco < best[2]:
+                best = (n, mm, plan.tco, plan.qps_per_unit)
+    n, mm, tco_, qps = best
+    row("fig12_best_disagg", qps,
+        f"{{{n}CN,{mm}MN}} tco_norm={tco_ / base_tco:.2f} (paper: {{3,8}} -2% QPS)")
+    mono8 = out["grid"].get("mono_8")
+    if mono8:
+        row("fig12_disagg_vs_mono8_qps_pct",
+            100 * (qps / mono8[0] - 1), "paper: -2%")
+    out["best"] = best
+    out["base_tco"] = base_tco
+    return out

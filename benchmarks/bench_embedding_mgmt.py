@@ -1,0 +1,37 @@
+"""Paper Fig. 7(d): greedy vs random embedding allocation + routing
+(thousands of tables on 8 MNs)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import embedding_manager as em
+
+from benchmarks.common import row
+
+
+def run() -> dict:
+    rng = np.random.RandomState(0)
+    tables = [em.TableInfo(i, int(rng.lognormal(14, 1.2)) + 1, 128,
+                           float(rng.lognormal(4, 1.0)) + 1)
+              for i in range(4000)]
+    caps = [int(2.2 * sum(t.size_bytes for t in tables) / 8)] * 8
+
+    g = em.allocate_greedy(tables, caps)
+    r = em.allocate_random(tables, caps)
+    rg = em.route_greedy(tables, g, 4, 8)
+    rr = em.route_random(tables, r, 4, 8)
+
+    out = {
+        "alloc_imbalance_greedy": em.imbalance(g.mn_used),
+        "alloc_imbalance_random": em.imbalance(r.mn_used),
+        "route_imbalance_greedy": em.imbalance(rg.mn_access),
+        "route_imbalance_random": em.imbalance(rr.mn_access),
+        "n_replicas": g.n_replicas,
+    }
+    row("fig7d_alloc_imbalance_greedy", out["alloc_imbalance_greedy"],
+        "max/mean capacity, 8 MNs")
+    row("fig7d_alloc_imbalance_random", out["alloc_imbalance_random"], "")
+    row("fig7d_route_imbalance_greedy", out["route_imbalance_greedy"],
+        "max/mean accesses")
+    row("fig7d_route_imbalance_random", out["route_imbalance_random"], "")
+    return out

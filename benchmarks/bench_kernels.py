@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU perf —
+these rows exist to regression-track kernel call overheads + validate
+numerics at bench scale; roofline numbers come from the dry-run)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import block, row, time_call
+
+
+def run() -> dict:
+    rng = np.random.RandomState(0)
+    out = {}
+
+    tables = jnp.asarray(rng.randn(8, 512, 64), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 512, (16, 8, 20)), jnp.int32)
+    us = time_call(lambda: block(ops.embedding_bag(tables, idx)))
+    err = float(jnp.max(jnp.abs(
+        ops.embedding_bag(tables, idx) - ref.embedding_bag_ref(tables, idx))))
+    row("kernel_embedding_bag_us", us, f"maxerr={err:.2e}")
+    out["embedding_bag"] = (us, err)
+
+    q = jnp.asarray(rng.randn(1, 4, 256, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 256, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 256, 32), jnp.float32)
+    us = time_call(lambda: block(ops.flash_attention(q, k, v)))
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v)
+        - ref.flash_attention_ref(q, k, v, causal=True))))
+    row("kernel_flash_attention_us", us, f"maxerr={err:.2e}")
+    out["flash_attention"] = (us, err)
+
+    q1 = jnp.asarray(rng.randn(2, 8, 32), jnp.float32)
+    kc = jnp.asarray(rng.randn(2, 256, 4, 32), jnp.float32)
+    vc = jnp.asarray(rng.randn(2, 256, 4, 32), jnp.float32)
+    pos = jnp.asarray(200, jnp.int32)
+    us = time_call(lambda: block(ops.flash_decode_partial(q1, kc, vc, pos)[0]))
+    o1, l1, m1 = ops.flash_decode_partial(q1, kc, vc, pos)
+    o2, l2, m2 = ref.flash_decode_ref(q1, kc, vc, pos)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    row("kernel_flash_decode_us", us, f"maxerr={err:.2e}")
+    out["flash_decode"] = (us, err)
+    return out

@@ -1,0 +1,37 @@
+"""Paper Fig. 14: heterogeneity provisioning — NMP-DIMMs in monolithic
+servers vs as a disaggregated MN pool, across the 3-year evolution."""
+from __future__ import annotations
+
+from repro.configs import rm1, rm2
+from repro.core import allocator, tco
+
+from benchmarks.common import row
+
+PEAK_LOAD = 2e5
+
+
+def run() -> dict:
+    out = {}
+    for fam, mod in (("rm1", rm1), ("rm2", rm2)):
+        sav = []
+        for v in range(6):
+            m = mod.generation(v)
+            cands_mono = tco.monolithic_candidates() + \
+                tco.monolithic_nmp_candidates()
+            cands_dis = (tco.disagg_candidates()
+                         + tco.disagg_candidates(mn_type="nmp_mn"))
+            try:
+                bm, _ = allocator.best_unit(m, cands_mono, PEAK_LOAD)
+                bd, _ = allocator.best_unit(m, cands_dis, PEAK_LOAD)
+            except ValueError:
+                continue
+            s = 1 - bd.tco / bm.tco
+            sav.append(s)
+            nmp = "nmp" in bd.unit.mn_type
+            row(f"fig14_{fam}_v{v}_saving_pct", 100 * s,
+                f"disagg_mn={bd.unit.mn_type} ({'NMP pool' if nmp else 'DDR'})")
+        out[fam] = sav
+        if sav:
+            row(f"fig14_{fam}_saving_range_pct",
+                100 * min(sav), f"to {100 * max(sav):.1f}% (paper: 21-43.6%)")
+    return out

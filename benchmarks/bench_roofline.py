@@ -1,0 +1,64 @@
+"""§Roofline: aggregate the dry-run JSON records into the roofline table
+(compute / memory / collective terms per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.configs.base import SHAPES
+
+from benchmarks.common import row
+from benchmarks.roofline import model_flops, roofline_terms
+
+
+def load_records(dryrun_dir: str = "results/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        c = d.get("collectives")
+        if c and not c.get("ar_weighted"):
+            c["total"] += c.get("all-reduce", 0.0)   # ring AR = 2x payload
+            c["all-reduce"] = 2 * c.get("all-reduce", 0.0)
+            c["ar_weighted"] = True
+        recs.append(d)
+    return recs
+
+
+def summarize(rec: dict) -> dict:
+    from benchmarks.roofline import analytic_hbm_bytes
+
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = rec.get("devices", 256)
+    flops = rec.get("hlo_scaled", {}).get("flops", 0.0) * chips
+    # fusion-realistic analytic lower bound (see EXPERIMENTS.md §Roofline)
+    hbm = analytic_hbm_bytes(cfg, shape, chips) * chips
+    coll = rec.get("collectives", {}).get("total", 0.0) * chips
+    terms = roofline_terms(flops, hbm, coll, chips)
+    mf = model_flops(cfg, shape)
+    terms["model_flops"] = mf
+    terms["hlo_flops"] = flops
+    terms["useful_ratio"] = mf / flops if flops else 0.0
+    terms["mem_gib"] = rec.get("memory", {}).get(
+        "total_per_device_bytes", 0) / 2 ** 30
+    return terms
+
+
+def run() -> dict:
+    out = {}
+    for rec in load_records():
+        if rec.get("status") != "ok":
+            continue
+        key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        t = summarize(rec)
+        out[key] = t
+        row(f"roofline_{key}",
+            max(t['compute_s'], t['memory_s'], t['collective_s']) * 1e6,
+            f"bound={t['bottleneck']} c={t['compute_s']:.3f}s "
+            f"m={t['memory_s']:.3f}s n={t['collective_s']:.3f}s "
+            f"useful={t['useful_ratio']:.2f} mem={t['mem_gib']:.1f}GiB")
+    return out

@@ -1,0 +1,45 @@
+"""Paper Fig. 4 + Fig. 12(a): scale-up NUMA effects and scale-out scaling.
+
+- naive SU-2S vs NUMA-aware SU-2S vs distributed 2x SO-1S (Fig. 4)
+- serving-unit throughput scaling with 2/4/8 SO-1S servers (Fig. 12a)
+"""
+from __future__ import annotations
+
+from repro.configs import rm1
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+from benchmarks.common import row
+
+
+def run() -> dict:
+    m = rm1.generation(0)
+    out = {}
+
+    naive = ServingUnitModel(m, UnitSpec(1, "su2s", scheme="su_naive"))
+    aware = ServingUnitModel(m, UnitSpec(1, "su2s", scheme="su_numa"))
+    dist2 = ServingUnitModel(m, UnitSpec(2, "so1s_1g", scheme="distributed"))
+
+    s_naive = naive.stage_times(128)
+    s_aware = aware.stage_times(128)
+    s_dist = dist2.stage_times(128)
+    red = 1 - s_aware.t_sparse / s_naive.t_sparse
+    row("fig4_sparse_reduction_numa_pct", 100 * red, "paper: >60%")
+    comm_frac = (s_aware.t_comm_in + s_aware.t_comm_out) / s_aware.total()
+    row("fig4_numa_comm_overhead_pct", 100 * comm_frac, "paper: <8%")
+    deg = s_dist.total() / s_aware.total() - 1
+    row("fig4_distributed_vs_numa_latency_pct", 100 * deg, "paper: <5%")
+    out["fig4"] = {"numa_reduction": red, "comm_frac": comm_frac,
+                   "dist_degradation": deg}
+
+    # Fig. 12(a): scaling out improves latency-bounded fraction of peak
+    qs = {}
+    for n in (2, 4, 8):
+        sm = ServingUnitModel(m, UnitSpec(n, "so1s_1g", scheme="distributed"))
+        q, _ = sm.latency_bounded_qps(sla=0.1)
+        qs[n] = q
+        row(f"fig12a_so1s_x{n}_qps", q,
+            f"frac_of_peak={q / sm.peak_qps():.2f} (paper: 65/76/90.6%)")
+    row("fig12a_superlinear_2to8", qs[8] / qs[2],
+        "paper: 5.6x with 4x servers")
+    out["fig12a"] = qs
+    return out

@@ -1,0 +1,32 @@
+"""Paper Fig. 8: interleaved vs sequential query processing."""
+from __future__ import annotations
+
+from repro.configs import rm1
+from repro.core.scheduler import INTERLEAVED, SEQUENTIAL
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+from repro.serving.simulator import ClusterSim, SimConfig
+
+from benchmarks.common import row
+
+
+def run() -> dict:
+    m = rm1.generation(0)
+    um = ServingUnitModel(m, UnitSpec(2, "cn_1g", 2, "ddr_mn"))
+    out = {}
+    for policy in (SEQUENTIAL, INTERLEAVED):
+        sim = ClusterSim(um, SimConfig(policy=policy, batch_size=128,
+                                       duration_s=10.0, warmup_s=2.0,
+                                       seed=1))
+        out[policy] = sim.latency_bounded_qps(sla=0.25, iters=10)
+        peak = ClusterSim(um, SimConfig(policy=policy, batch_size=128,
+                                        duration_s=10.0, warmup_s=2.0,
+                                        seed=1)).latency_bounded_qps(
+            sla=5.0, iters=8)
+        out[policy + "_peak"] = peak
+    gain = out[SEQUENTIAL] / max(out[INTERLEAVED], 1e-9) - 1
+    row("fig8_sequential_qps", out[SEQUENTIAL], "latency-bounded@250ms")
+    row("fig8_interleaved_qps", out[INTERLEAVED], "latency-bounded@250ms")
+    row("fig8_sequential_gain_pct", 100 * gain, "paper: ~28%")
+    peak_gap = abs(out[SEQUENTIAL + "_peak"] / max(out[INTERLEAVED + "_peak"], 1e-9) - 1)
+    row("fig8_peak_gap_pct", 100 * peak_gap, "paper: similar peak")
+    return {"gain": gain, "peak_gap": peak_gap}

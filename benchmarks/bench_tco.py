@@ -1,0 +1,47 @@
+"""Paper Fig. 13 + Fig. 10/11: disaggregated vs monolithic TCO across
+RM1/RM2 generations V0..V5; idleness breakdown."""
+from __future__ import annotations
+
+from repro.configs import rm1, rm2
+from repro.core import allocator, tco
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+from benchmarks.common import row
+
+PEAK_LOAD = 2e5
+
+
+def run() -> dict:
+    out = {}
+    for fam, mod in (("rm1", rm1), ("rm2", rm2)):
+        best_saving = 0.0
+        savings = []
+        for v in range(6):
+            m = mod.generation(v)
+            try:
+                bm, _ = allocator.best_unit(m, tco.monolithic_candidates(),
+                                            PEAK_LOAD)
+                bd, _ = allocator.best_unit(m, tco.disagg_candidates(),
+                                            PEAK_LOAD)
+            except ValueError:
+                continue
+            s = 1 - bd.tco / bm.tco
+            savings.append(s)
+            best_saving = max(best_saving, s)
+            row(f"fig13_{fam}_v{v}_saving_pct", 100 * s,
+                f"mono=${bm.tco/1e6:.2f}M disagg=${bd.tco/1e6:.2f}M "
+                f"unit={{{bd.unit.n}x{bd.unit.cn_type},{bd.unit.m}MN}}")
+        out[fam] = savings
+        row(f"fig13_{fam}_max_saving_pct", 100 * best_saving,
+            "paper RM1: up to 49.3%; RM2: 4.3-9.3%")
+
+    # Fig. 11: wasted-TCO breakdown on monolithic
+    idl = tco.idleness_breakdown(
+        rm1.generation(0), UnitSpec(8, "so1s_1g", scheme="distributed"),
+        PEAK_LOAD)
+    row("fig11_pipeline_idle_tco_pct", 100 * idl["pipeline_idle_tco_frac"],
+        "paper RM1: 15.6-23.1%")
+    row("fig11_overprovision_tco_pct", 100 * idl["overprovision_tco_frac"],
+        "paper: 6.8%")
+    out["idleness"] = idl
+    return out

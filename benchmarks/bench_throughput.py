@@ -1,0 +1,32 @@
+"""Paper Fig. 5: throughput-latency tradeoff + batch-size sweep for
+RM1.V0 on two SO-1S servers (latency-bounded throughput peaks at an
+intermediate batch; SLA violated at batch 2048)."""
+from __future__ import annotations
+
+from repro.configs import rm1
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+from benchmarks.common import row
+
+
+def run() -> dict:
+    m = rm1.generation(0)
+    sm = ServingUnitModel(m, UnitSpec(2, "so1s_1g", scheme="distributed"))
+    best_qps, best_b = sm.latency_bounded_qps(sla=0.1)
+    out = {"batch_sweep": {}}
+    for b in (32, 64, 128, 256, 512, 1024, 2048):
+        total = sm.stage_times(b).total()
+        # rate search at this batch only
+        lo, hi = 0.0, sm.peak_qps(b)
+        for _ in range(30):
+            mid = 0.5 * (lo + hi)
+            if sm.p95_latency(b, mid) <= 0.1:
+                lo = mid
+            else:
+                hi = mid
+        out["batch_sweep"][b] = (lo, total)
+        row(f"fig5_qps_batch_{b}", lo,
+            f"pipeline={total * 1e3:.1f}ms" + (" SLA-infeasible" if total > 0.1 else ""))
+    out["best"] = (best_qps, best_b)
+    row("fig5_best_qps", best_qps, f"best batch={best_b} (paper: 128)")
+    return out

@@ -1,0 +1,354 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh):
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s ICI link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse compiled.as_text() (post-SPMD HLO),
+summing operand sizes of all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute. Ops inside while-loop bodies (the
+scan-over-layers) are scaled by the loop trip count, read from XLA's
+known_trip_count annotation when present.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+# peak numbers (TPU v5e targets; see core/hardware.py)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    """Group size from replica_groups: iota form [g,k]<=[N] or explicit
+    {{0,1,..},{..}}."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _moved_bytes(kind: str, shape_region: str, line: str) -> int:
+    """Per-device link bytes of one collective (ring algorithm), derived
+    from the RESULT shape (operand shapes are not printed in post-opt
+    HLO): all-gather/reduce-scatter move ~payload bytes; all-reduce is
+    RS+AG = 2x payload; all-to-all/permute move ~payload.
+    """
+    total = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(shape_region)
+                if dt in _DTYPE_BYTES)
+    g = _group_size(line)
+    if kind == "all-gather" and g:
+        total //= g          # operand (per-device payload) = result/gsize
+    elif kind == "reduce-scatter" and g:
+        total *= g           # operand = result * gsize
+    elif kind == "all-reduce":
+        total *= 2           # ring AR = reduce-scatter + all-gather
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str,
+                              default_trip: int = 1) -> Dict[str, float]:
+    """Parse post-optimization HLO: per-op-kind collective bytes, ops in
+    while bodies scaled by XLA's known_trip_count annotation."""
+    # 1. split into computations
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            cur = m2.group(1) if m2 else None
+            comps[cur] = []
+            continue
+        if cur is not None and s and not s.startswith("}"):
+            comps[cur].append(s)
+
+    # 2. while ops: body/condition computation -> trip count + parent
+    body_trip: Dict[str, int] = {}
+    call_sites: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln and "body=" in ln:
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                if not bm:
+                    continue
+                body = bm.group(1)
+                tm = re.search(
+                    r'known_trip_count"?\s*[:=]\s*\{+\s*"?n"?\s*[:=]\s*"?(\d+)',
+                    ln)
+                trip = int(tm.group(1)) if tm else default_trip
+                body_trip[body] = trip
+                call_sites[body] = cname
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cm:
+                    call_sites[cm.group(1)] = cname
+                    body_trip.setdefault(cm.group(1), trip)
+
+    def multiplier(cname: str, depth=0) -> int:
+        if depth > 8 or cname is None:
+            return 1
+        if cname in body_trip:
+            parent = call_sites.get(cname)
+            outer = multiplier(parent, depth + 1) if parent else 1
+            return body_trip[cname] * outer
+        return 1
+
+    # 3. sum collective bytes, scaled by loop trip counts
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["total"] = 0.0
+    counts = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"=\s*[^=]*?\b(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for ln in lines:
+            m = op_re.search(ln)
+            if not m:
+                continue
+            kind = m.group(1)
+            b = _moved_bytes(kind, ln[m.start():m.end()], ln) * mult
+            out[kind] += b
+            out["total"] += b
+            counts[kind] += 1
+    out["counts"] = counts
+    out["while_trips"] = {k: v for k, v in body_trip.items() if v != 1}
+    out["ar_weighted"] = True   # all-reduce already counted at 2x payload
+    return out
+
+
+def hlo_cost_scaled(hlo: str, default_trip: int = 1) -> Dict[str, float]:
+    """Loop-aware per-device cost from post-opt HLO text.
+
+    compiled.cost_analysis() counts while bodies ONCE (verified on this
+    backend), so we re-derive: FLOPs from every `dot` (2*M*N*K via a
+    per-computation symbol table for operand shapes) and HBM bytes as
+    result+operand bytes of materializing instructions — each scaled by
+    its computation's loop trip count (XLA known_trip_count). Fusion-body
+    internals are skipped (counted at their call sites) for bytes but
+    traversed for FLOPs.
+    """
+    # split computations, keep raw lines
+    comps: Dict[str, List[str]] = {}
+    fusion_bodies = set(re.findall(r"calls=%?([\w.\-]+)", hlo))
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            cur = m2.group(1) if m2 else None
+            comps[cur] = [s]
+            continue
+        if cur is not None and s and not s.startswith("}"):
+            comps[cur].append(s)
+
+    # while body/cond -> trip, parent
+    body_trip: Dict[str, int] = {}
+    call_sites: Dict[str, str] = {}
+    fusion_sites: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln and "body=" in ln:
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                if bm:
+                    tm = re.search(
+                        r'known_trip_count"?\s*[:=]\s*\{+\s*"?n"?\s*[:=]\s*"?(\d+)',
+                        ln)
+                    trip = int(tm.group(1)) if tm else default_trip
+                    body_trip[bm.group(1)] = trip
+                    call_sites[bm.group(1)] = cname
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cm:
+                    call_sites[cm.group(1)] = cname
+                    body_trip.setdefault(cm.group(1), 1)
+            for fb in re.findall(r"calls=%?([\w.\-]+)", ln):
+                fusion_sites[fb] = cname
+
+    def multiplier(cname, depth=0) -> int:
+        if cname is None or depth > 10:
+            return 1
+        if cname in body_trip:
+            return body_trip[cname] * multiplier(call_sites.get(cname),
+                                                 depth + 1)
+        if cname in fusion_sites:
+            return multiplier(fusion_sites[cname], depth + 1)
+        return 1
+
+    # per-computation symbol tables: %name -> (dtype, [dims])
+    def symtab(lines):
+        tab = {}
+        for ln in lines:
+            m = re.match(r"%?([\w.\-]+)\s*=\s*(.+)", ln)
+            if not m:
+                # computation signature params: %p.1: f32[...]
+                for pm in re.finditer(r"%?([\w.\-]+):\s*(\w+)\[([\d,]*)\]",
+                                      ln):
+                    tab[pm.group(1)] = (pm.group(2), pm.group(3))
+                continue
+            name, rest = m.group(1), m.group(2)
+            sm = _SHAPE_RE.search(rest)
+            if sm and sm.group(1) in _DTYPE_BYTES:
+                tab[name] = (sm.group(1), sm.group(2))
+        return tab
+
+    flops = 0.0
+    bytes_ = 0.0
+    transcend = 0.0
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        tab = symtab(lines)
+        in_fusion = cname in fusion_bodies
+        for ln in lines:
+            m = re.match(r"%?([\w.\-]+)\s*=\s*(.*)", ln)
+            if not m:
+                continue
+            rest = m.group(2)
+            # FLOPs: dots (counted everywhere incl. fusion bodies)
+            dm = re.search(r"\bdot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", rest)
+            if dm:
+                out_elems = 1
+                sm = _SHAPE_RE.search(rest)
+                if sm:
+                    dims = sm.group(2)
+                    for d in dims.split(","):
+                        if d:
+                            out_elems *= int(d)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                k = 1
+                lhs = tab.get(dm.group(1))
+                if lhs and cdims and cdims.group(1):
+                    ldims = [int(x) for x in lhs[1].split(",") if x]
+                    for ci in cdims.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            k *= ldims[ci]
+                flops += 2.0 * out_elems * k * mult
+                continue
+            if in_fusion:
+                continue
+            # bytes: result + operands for real ops
+            op = re.match(r"(?:\([^)]*\)|\S+)\s+([\w\-]+)\(", rest)
+            kindname = op.group(1) if op else ""
+            if kindname in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast", "while", "conditional",
+                            "after-all", ""):
+                continue
+            b = 0
+            sm = _SHAPE_RE.search(rest.split("(")[0])
+            for dt, dims in _SHAPE_RE.findall(rest.split("(")[0]):
+                if dt in _DTYPE_BYTES:
+                    b += _shape_bytes(dt, dims)
+            for on in re.findall(r"[(,]\s*%([\w.\-]+)", rest):
+                if on in tab:
+                    b += _shape_bytes(*tab[on])
+            bytes_ += b * mult
+            if kindname in ("exponential", "log", "tanh", "rsqrt", "power"):
+                transcend += b / 4 * mult
+    return {"flops": flops, "bytes": bytes_, "transcendentals": transcend}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = hbm_bytes / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom
+    total = max(compute, memory, collective)
+    terms["roofline_frac_compute"] = compute / total if total else 0.0
+    return terms
+
+
+def analytic_hbm_bytes(cfg, shape, chips: int) -> float:
+    """Fusion-realistic per-device HBM traffic per step (lower bound).
+
+    The HLO-text byte count on this CPU backend treats every intermediate
+    as an HBM round-trip (no fusion) — an upper bound. Real TPU executors
+    fuse elementwise chains; the dominant residual traffic is parameters
+    (+optimizer state), activations at block boundaries, and caches.
+    """
+    P_loc = cfg.param_count() / (16 if chips >= 256 else 1)  # model axis
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = max(cfg.num_layers, 1)
+    dp = chips / 16 if chips >= 256 else 1
+    tokens_loc = B * S / dp if shape.kind != "decode" else B / dp
+    if shape.kind == "train":
+        # params: fwd read + bwd read (remat) + grad write (bf16)
+        #       + opt m/v read+write + master read/write (f32)
+        traffic = P_loc * (3 * 2 + 4 * 4)
+        # activations: residual stream per layer, write+2reads, bf16, SP/16
+        traffic += L * (tokens_loc / 16) * d * 2 * 3 * 16 / 16
+        traffic += L * tokens_loc * d * 2 * 3       # block-internal acts
+        # logits chunks fp32
+        traffic += tokens_loc * (cfg.vocab_size / 16) * 4 * 2
+    elif shape.kind == "prefill":
+        traffic = P_loc * 2
+        traffic += L * tokens_loc * d * 2 * 2
+        # emitted KV cache write
+        traffic += L * tokens_loc * cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2
+    else:
+        traffic = P_loc * 2                         # stream all weights
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        if cfg.family not in ("ssm",):
+            L_attn = L
+            if cfg.family == "hybrid" and cfg.ssm and cfg.ssm.attn_every:
+                L_attn = L // cfg.ssm.attn_every
+            # read the local KV-cache slice once
+            traffic += L_attn * (B / dp if B >= dp else 1) * S / 16 * kv * hd * 2 * 2
+    return traffic
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (2*N*D forward), using active
+    params for MoE, + attention sequence terms."""
+    import math
+    N = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        f = 6.0 * N * B * S
+    elif shape.kind == "prefill":
+        f = 2.0 * N * B * S
+    else:
+        f = 2.0 * N * B  # one token
+    # attention score/value FLOPs (causal ~ S^2/2 per head pair)
+    hd = cfg.resolved_head_dim if cfg.num_heads else 0
+    H = cfg.num_heads
+    if H and cfg.family not in ("ssm",):
+        L_attn = cfg.num_layers
+        if cfg.family == "hybrid" and cfg.ssm and cfg.ssm.attn_every:
+            L_attn = cfg.num_layers // cfg.ssm.attn_every
+        if shape.kind in ("train", "prefill"):
+            per = 2 * 2 * H * hd * (S * S / 2) * B * L_attn
+            f += per * (3 if shape.kind == "train" else 1)
+        else:
+            f += 2 * 2 * H * hd * S * B * L_attn
+    return f

@@ -1,0 +1,39 @@
+"""TCO evolution study (paper Figs. 10/13/14): monolithic vs
+disaggregated vs NMP-provisioned clusters across RM1/RM2 V0-V5.
+
+Run:  PYTHONPATH=src python examples/tco_study.py
+"""
+from repro import configs
+from repro.core import allocator, tco
+
+PEAK_LOAD = 2e5
+
+
+def study(fam: str):
+    print(f"— {fam.upper()} V0..V5 (peak load {PEAK_LOAD:.0f} samples/s) —")
+    header = f"{'gen':6s} {'mono $M':>9s} {'disagg $M':>10s} {'saving':>8s} {'+NMP $M':>9s} {'saving':>8s}"
+    print(header)
+    for v in range(6):
+        m = configs.get_generation(fam, v)
+        try:
+            bm, _ = allocator.best_unit(m, tco.monolithic_candidates()
+                                        + tco.monolithic_nmp_candidates(),
+                                        PEAK_LOAD)
+            bd, _ = allocator.best_unit(m, tco.disagg_candidates(), PEAK_LOAD)
+            bn, _ = allocator.best_unit(m, tco.disagg_candidates()
+                                        + tco.disagg_candidates(mn_type="nmp_mn"),
+                                        PEAK_LOAD)
+        except ValueError as e:
+            print(f"  v{v}: infeasible ({e})")
+            continue
+        s1 = 1 - bd.tco / bm.tco
+        s2 = 1 - bn.tco / bm.tco
+        print(f"  v{v:2d}  {bm.tco/1e6:9.2f} {bd.tco/1e6:10.2f} "
+              f"{100*s1:7.1f}% {bn.tco/1e6:9.2f} {100*s2:7.1f}%")
+
+
+if __name__ == "__main__":
+    study("rm1")
+    study("rm2")
+    print("paper claims: disagg up to 49.3% (RM1); with NMP pools the "
+          "disaggregated cluster saves 21-43.6% over 3 years")

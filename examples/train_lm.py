@@ -1,0 +1,40 @@
+"""End-to-end driver: train the ~100M-param assigned arch (smollm-135m)
+for a few hundred steps on synthetic token streams, with checkpointing
+and fault-tolerant restart.
+
+Full-size run:     PYTHONPATH=src python examples/train_lm.py --steps 300
+Quick smoke (CI):  PYTHONPATH=src python examples/train_lm.py --reduced --steps 40
+"""
+import argparse
+
+from repro import configs
+from repro.data.queries import ShardedLoader, lm_batch
+from repro.models import registry
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import TrainLoopConfig, run_train_loop
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--ckpt", default="/tmp/repro_smollm_ckpt")
+    args = p.parse_args()
+
+    cfg = (configs.get_reduced("smollm-135m") if args.reduced
+           else configs.get_config("smollm-135m"))
+    model = registry.build(cfg)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    loader = ShardedLoader(
+        lambda r: lm_batch(cfg.vocab_size, args.batch, args.seq, r))
+    loop = TrainLoopConfig(steps=args.steps, log_every=10,
+                           checkpoint_every=100, checkpoint_dir=args.ckpt)
+    _, _, hist = run_train_loop(model, OptConfig(lr=3e-4), loader, loop)
+    print(f"loss: {hist[0][1]:.3f} -> {hist[-1][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""DisaggRec core: the paper's contributions as composable modules.
+
+C1 near-memory reduction ........ core.sharding (+ kernels/embedding_bag)
+C2 embedding management ......... core.embedding_manager
+C3 sequential query processing .. core.scheduler (+ serving.simulator)
+C4 failure-aware allocation ..... core.allocator, core.failure
+C5/C6 TCO + heterogeneity ....... core.tco, core.hardware
+"""
+from repro.core import (allocator, embedding_manager, failure, hardware,
+                        scheduler, serving_unit, sharding, tco)  # noqa: F401

@@ -1,0 +1,169 @@
+"""Intelligent embedding management (paper §IV-B, Fig. 7).
+
+Greedy **allocation**: compute nReplicas from aggregate MN capacity, then
+place each table's replicas on the nReplicas MNs with the most available
+capacity. Greedy **MemAccess routing**: for every (task, table), route to
+the replica-holding MN with the least accumulated access bytes
+(access bytes = avg pooling factor x embedding row bytes, profiled from
+historical queries). The random baseline (Fig. 7d) picks both uniformly.
+
+Failure handling (§IV-A): losing an MN re-routes to surviving replicas;
+losing all replicas of any table triggers a re-initialization with backup
+MNs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random as _random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class TableInfo:
+    tid: int
+    rows: int
+    dim: int
+    avg_pooling: float
+    dtype_bytes: int = 4
+
+    @property
+    def size_bytes(self) -> int:
+        return self.rows * self.dim * self.dtype_bytes
+
+    @property
+    def access_bytes(self) -> float:
+        """Expected bytes touched per sample (pooling x row bytes)."""
+        return self.avg_pooling * self.dim * self.dtype_bytes
+
+
+@dataclass
+class Allocation:
+    replicas: Dict[int, List[int]]           # table id -> MN ids
+    mn_used: List[int]                       # bytes allocated per MN
+    n_replicas: int
+
+
+@dataclass
+class RoutingTable:
+    # (task id, table id) -> destination MN id  (paper Fig. 7c tuple)
+    routes: Dict[Tuple[int, int], int]
+    mn_access: List[float]                   # accumulated access bytes/sample
+
+
+def compute_n_replicas(tables: Sequence[TableInfo], capacities: Sequence[int]) -> int:
+    total = sum(t.size_bytes for t in tables)
+    cap = sum(capacities)
+    if total == 0:
+        return len(capacities)
+    return max(1, min(len(capacities), int(cap // total)))
+
+
+def allocate_greedy(tables: Sequence[TableInfo], capacities: Sequence[int],
+                    n_replicas: Optional[int] = None) -> Allocation:
+    m = len(capacities)
+    nrep = n_replicas or compute_n_replicas(tables, capacities)
+    used = [0] * m
+    replicas: Dict[int, List[int]] = {}
+    # large tables first: classic greedy bin balance
+    for t in sorted(tables, key=lambda t: -t.size_bytes):
+        avail = sorted(range(m), key=lambda i: capacities[i] - used[i],
+                       reverse=True)[:nrep]
+        for i in avail:
+            used[i] += t.size_bytes
+        replicas[t.tid] = sorted(avail)
+    return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
+
+
+def allocate_random(tables: Sequence[TableInfo], capacities: Sequence[int],
+                    n_replicas: Optional[int] = None, seed: int = 0) -> Allocation:
+    rng = _random.Random(seed)
+    m = len(capacities)
+    nrep = n_replicas or compute_n_replicas(tables, capacities)
+    used = [0] * m
+    replicas: Dict[int, List[int]] = {}
+    for t in tables:
+        picks = rng.sample(range(m), nrep)
+        for i in picks:
+            used[i] += t.size_bytes
+        replicas[t.tid] = sorted(picks)
+    return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
+
+
+def route_greedy(tables: Sequence[TableInfo], alloc: Allocation,
+                 n_tasks: int, m: int,
+                 exclude: Sequence[int] = ()) -> RoutingTable:
+    acc = [0.0] * m
+    routes: Dict[Tuple[int, int], int] = {}
+    dead = set(exclude)
+    # heaviest access streams first for tighter balance
+    order = sorted(tables, key=lambda t: -t.access_bytes)
+    for task in range(n_tasks):
+        for t in order:
+            cands = [i for i in alloc.replicas[t.tid] if i not in dead]
+            if not cands:
+                raise LookupError(f"table {t.tid}: all replicas failed")
+            dest = min(cands, key=lambda i: acc[i])
+            acc[dest] += t.access_bytes
+            routes[(task, t.tid)] = dest
+    return RoutingTable(routes=routes, mn_access=acc)
+
+
+def route_random(tables: Sequence[TableInfo], alloc: Allocation,
+                 n_tasks: int, m: int, seed: int = 0,
+                 exclude: Sequence[int] = ()) -> RoutingTable:
+    rng = _random.Random(seed)
+    acc = [0.0] * m
+    routes: Dict[Tuple[int, int], int] = {}
+    dead = set(exclude)
+    for task in range(n_tasks):
+        for t in tables:
+            cands = [i for i in alloc.replicas[t.tid] if i not in dead]
+            if not cands:
+                raise LookupError(f"table {t.tid}: all replicas failed")
+            dest = rng.choice(cands)
+            acc[dest] += t.access_bytes
+            routes[(task, t.tid)] = dest
+    return RoutingTable(routes=routes, mn_access=acc)
+
+
+def imbalance(values: Sequence[float]) -> float:
+    """max/mean load ratio (1.0 = perfectly balanced)."""
+    vals = [v for v in values if v > 0] or [0.0]
+    mean = sum(vals) / len(vals)
+    return max(vals) / mean if mean else 1.0
+
+
+def rebuild_after_failure(tables: Sequence[TableInfo], alloc: Allocation,
+                          n_tasks: int, m: int,
+                          failed: Sequence[int],
+                          backup_capacity: int = 0):
+    """MN failure handling (paper Fig. 7b).
+
+    Returns (routing, reinitialized: bool, alloc). If every table still has
+    a live replica we only re-run greedy routing over survivors; otherwise
+    the serving unit re-initializes: backup MNs join and allocation is
+    recomputed from scratch.
+    """
+    dead = set(failed)
+    lost = [t for t in tables
+            if all(r in dead for r in alloc.replicas[t.tid])]
+    if not lost:
+        routing = route_greedy(tables, alloc, n_tasks, m, exclude=failed)
+        return routing, False, alloc
+    # re-initialize with backups replacing dead MNs
+    caps = [0 if i in dead else backup_capacity or max(alloc.mn_used)
+            for i in range(m)]
+    new_alloc = allocate_greedy(tables, caps, n_replicas=alloc.n_replicas)
+    routing = route_greedy(tables, new_alloc, n_tasks, m, exclude=failed)
+    return routing, True, new_alloc
+
+
+def shard_assignment(alloc: Allocation, routing: RoutingTable,
+                     n_tables: int, m: int, task: int = 0) -> List[List[int]]:
+    """Per-MN table lists for the JAX table-sharded embedding op: the MN a
+    task's lookups route to is the shard that owns the table for that task."""
+    shards: List[List[int]] = [[] for _ in range(m)]
+    for tid in range(n_tables):
+        shards[routing.routes[(task, tid)]].append(tid)
+    return shards

@@ -1,0 +1,87 @@
+"""Query workload generation (paper Fig. 2).
+
+- Heavy-tailed query-size distribution (Fig. 2a): lognormal, most queries
+  small, a long tail of large ranking requests.
+- Poisson arrivals modulated by the diurnal load curve (Fig. 2b).
+- Preprocessing (G_P): hashing raw sparse features to table indices.
+
+Everything is seeded and wall-clock-free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QueryDist:
+    mean_size: float = 64.0
+    sigma: float = 1.0          # lognormal shape: heavy tail
+    max_size: int = 4096
+
+    def sample(self, rng: np.random.RandomState, n: int) -> np.ndarray:
+        mu = np.log(self.mean_size) - 0.5 * self.sigma ** 2
+        s = rng.lognormal(mu, self.sigma, size=n)
+        return np.clip(np.ceil(s), 1, self.max_size).astype(np.int64)
+
+
+def poisson_arrivals(rate_qps: float, duration_s: float,
+                     rng: np.random.RandomState) -> np.ndarray:
+    """Arrival timestamps over [0, duration)."""
+    n = rng.poisson(rate_qps * duration_s)
+    return np.sort(rng.uniform(0.0, duration_s, size=n))
+
+
+def hash_features(raw: np.ndarray, num_rows: int, salt: int = 0) -> np.ndarray:
+    """G_P: map raw sparse ids to table row indices (multiplicative hash)."""
+    x = raw.astype(np.uint64) * np.uint64(2654435761) + np.uint64(salt)
+    x ^= x >> np.uint64(16)
+    return (x % np.uint64(num_rows)).astype(np.int32)
+
+
+def dlrm_batch(cfg, batch: int, rng: np.random.RandomState,
+               pooling_sigma: float = 0.3):
+    """Synthetic click-log batch for a DLRM config: dense features,
+    per-table pooled index lists (-1 padded), labels."""
+    r = cfg.dlrm
+    dense = rng.randn(batch, r.num_dense_features).astype(np.float32)
+    P = r.avg_pooling
+    raw = rng.randint(0, 1 << 31, size=(batch, r.num_tables, P))
+    idx = hash_features(raw, r.rows_per_table)
+    # variable pooling: mask out a lognormal-distributed tail per bag
+    lens = np.clip(rng.lognormal(np.log(max(P * 0.7, 1.0)), pooling_sigma,
+                                 size=(batch, r.num_tables)), 1, P)
+    mask = np.arange(P)[None, None, :] < lens[..., None]
+    idx = np.where(mask, idx, -1).astype(np.int32)
+    labels = rng.binomial(1, 0.2, size=batch).astype(np.int32)
+    return {"dense": dense, "indices": idx, "labels": labels}
+
+
+def lm_batch(vocab: int, batch: int, seq: int, rng: np.random.RandomState):
+    """Synthetic token stream (zipf-ish unigram) for LM train smoke."""
+    p = 1.0 / np.arange(1, vocab + 1) ** 1.1
+    p /= p.sum()
+    toks = rng.choice(vocab, size=(batch, seq + 1), p=p).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class ShardedLoader:
+    """Deterministic per-host data sharding: host i of k reads every k-th
+    batch (the standard multi-pod input pipeline contract)."""
+
+    def __init__(self, gen_fn, host_id: int = 0, num_hosts: int = 1,
+                 seed: int = 0):
+        self.gen = gen_fn
+        self.host = host_id
+        self.k = num_hosts
+        self.seed = seed
+
+    def __iter__(self) -> Iterator:
+        step = 0
+        while True:
+            rng = np.random.RandomState(
+                (self.seed * 9973 + step * self.k + self.host) % (1 << 31))
+            yield self.gen(rng)
+            step += 1

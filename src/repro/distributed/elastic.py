@@ -1,0 +1,59 @@
+"""Elastic scaling: re-shard a running job onto a different mesh.
+
+Node failures shrink the healthy device set; DisaggRec's failure handling
+(§IV-A) maps at training/serving time to: checkpoint -> rebuild mesh from
+survivors -> restore with the new mesh's shardings -> rebuild routing
+(embedding_manager.rebuild_after_failure). On a single host this is
+exercised by re-sharding across host-device subsets (tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+
+
+def healthy_mesh(axes: Dict[str, int], failed_fraction: float = 0.0,
+                 devices=None) -> Mesh:
+    """Build the largest mesh with the requested axis RATIOS from the
+    surviving device pool (drops whole data-parallel slices first —
+    failures cost DP replicas, never TP shards)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n_ok = int(len(devices) * (1.0 - failed_fraction))
+    model = axes.get("model", 1)
+    data = max(1, n_ok // model)
+    # shrink data-parallel dim to fit the survivors
+    use = data * model
+    dev = np.asarray(devices[:use]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_tree(tree, spec_tree, mesh, rules=None):
+    """device_put every leaf with the new mesh's shardings."""
+    with shd.use_mesh(mesh, rules):
+        shardings = shd.tree_shardings(spec_tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, shardings)
+
+
+def elastic_restore(ckpt_dir: str, model, opt_cfg, mesh, rules=None):
+    """Restore the latest checkpoint re-sharded onto `mesh`."""
+    from repro.train import checkpoint as ckpt
+    from repro.train import optimizer as opt_mod
+
+    params_tpl = model.init(0)
+    opt_tpl = opt_mod.init_state(opt_cfg, params_tpl)
+    out = ckpt.try_restore(ckpt_dir, params_tpl, opt_tpl)
+    if out is None:
+        return None
+    params, opt_state, step = out
+    params = reshard_tree(params, model.param_specs(), mesh, rules)
+    opt_state = reshard_tree(
+        opt_state, opt_mod.state_specs(opt_cfg, model.param_specs()),
+        mesh, rules)
+    return params, opt_state, step

@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules (MaxText-style) mapping model-space axis
+names to mesh axes, plus helpers to build NamedShardings for pjit.
+
+The DisaggRec mapping lives here: the ``model`` mesh axis is the "memory
+node pool" (embedding tables, experts, KV-cache sequence shards), the
+``data``(+``pod``) axes are the "compute node pool" (batch replicas).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> mesh axis (or tuple of mesh axes, or None=replicated).
+# Axes absent from the active mesh are dropped at resolution time, so one
+# rule set serves both the single-pod and multi-pod meshes.
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),       # expert parallelism (MN pool)
+    "expert_ffn": None,
+    "table_shard": ("model",),   # DLRM embedding-table shards (MN pool)
+    "kv_seq": ("model",),        # sequence-sharded KV cache at decode
+    "layers": None,
+    "conv": None,
+    "ssm_state": None,
+    "opt_shard": ("data",),      # ZeRO-1 optimizer-state sharding
+    "qlen": None,
+    # Megatron-SP: the residual stream between blocks is sequence-sharded
+    # over `model`; blocks gather/reduce-scatter at their boundaries
+    "seq_sp": None,
+    "mamba_heads": None,
+    "table_rows": None,
+    # rwkv square (d,d) projections: output dim never shards (the input
+    # dim carries attn_din's mode-dependent sharding)
+    "rwkv_out": None,
+    "rwkv_out_c": None,
+    # KV-cache head dim: never sharded (kv_seq carries the model axis)
+    "cache_heads": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Optional[Tuple[str, ...]]] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    """Activate a mesh + logical rules for lsc()/make_sharding()."""
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    if rules is not None:
+        merged = dict(DEFAULT_RULES)
+        merged.update(rules)
+        _CTX.rules = merged
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def axis_size(name: str) -> int:
+    m = _CTX.mesh
+    if m is None or name not in m.shape:
+        return 1
+    return m.shape[name]
+
+
+def resolve(names: Sequence[Optional[str]]) -> P:
+    """Logical axis names -> PartitionSpec under the active mesh+rules."""
+    mesh = _CTX.mesh
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+            continue
+        target = _CTX.rules.get(n)
+        if target is None:
+            out.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        present = tuple(a for a in target if mesh is None or a in mesh.shape)
+        out.append(present if len(present) > 1 else (present[0] if present else None))
+    # PartitionSpec trailing Nones are harmless; keep explicit for clarity
+    return P(*out)
+
+
+def make_sharding(names: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(names))
+
+
+def lsc(x, *names):
+    """Logical sharding constraint; no-op without an active mesh."""
+    if _CTX.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, resolve(names)))
+
+
+def tree_shardings(spec_tree):
+    """Map a pytree of logical-name tuples to NamedShardings (or None)."""
+    return jax.tree.map(
+        lambda names: make_sharding(names),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def resolve_for_shape(names: Sequence[Optional[str]], shape) -> P:
+    """resolve(), but drop mesh axes a dimension cannot divide (e.g.
+    global_batch=1 under a 16-way data axis)."""
+    mesh = _CTX.mesh
+    base = resolve(names)
+    if mesh is None:
+        return base
+    out = []
+    for dim, entry in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        keep, prod = [], 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        out.append(keep[0] if len(keep) == 1 else (tuple(keep) or None))
+    return P(*out)
+
+
+def tree_shardings_for_shapes(spec_tree, shape_tree):
+    """Shape-aware tree_shardings: divisibility-filtered per leaf."""
+    mesh = _CTX.mesh
+
+    def f(names, s):
+        if mesh is None:
+            return None
+        return NamedSharding(mesh, resolve_for_shape(tuple(names), s.shape))
+
+    return jax.tree.map(f, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

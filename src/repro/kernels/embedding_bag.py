@@ -1,0 +1,70 @@
+"""Fused embedding-bag (gather + pooling) Pallas kernel.
+
+Near-memory reduction on TPU: the table lives in HBM; the grid walks
+(bag, pooling-slot) and the BlockSpec index_map — driven by the
+scalar-prefetched index array — streams exactly the needed (1, D) rows
+into VMEM, double-buffered by the Pallas pipeline. Accumulation happens
+in the revisited VMEM output block, so raw rows never cross back to HBM:
+only the pooled Fsum is written out — the paper's NMP-DIMM insight,
+VMEM-local.
+
+Padding indices are negative: their loads are clamped to row 0 and the
+accumulate is predicated off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, table_blk, out_blk):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        out_blk[...] = jnp.zeros_like(out_blk)
+
+    @pl.when(idx_ref[b, p] >= 0)
+    def _acc():
+        out_blk[...] += table_blk[...].astype(out_blk.dtype)
+
+
+def embedding_bag_1table(table: jax.Array, idx: jax.Array,
+                         interpret: bool = True) -> jax.Array:
+    """table: (R, D); idx: (B, P) int32, -1 padded -> pooled (B, D)."""
+    R, D = table.shape
+    B, P = idx.shape
+
+    def table_map(b, p, idx_ref):
+        # clamp padding to row 0; the accumulate is masked in the kernel
+        return jnp.maximum(idx_ref[b, p], 0), 0
+
+    def out_map(b, p, idx_ref):
+        return b, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[pl.BlockSpec((1, D), table_map)],
+        out_specs=pl.BlockSpec((1, D), out_map),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(idx, table)
+
+
+def embedding_bag(tables: jax.Array, idx: jax.Array,
+                  interpret: bool = True) -> jax.Array:
+    """tables: (T, R, D); idx: (B, T, P) -> pooled (B, T, D)."""
+    f = functools.partial(embedding_bag_1table, interpret=interpret)
+    out = jax.vmap(f, in_axes=(0, 1), out_axes=1)(tables,
+                                                  idx)  # (B, T, D)
+    return out.astype(tables.dtype)

@@ -1,0 +1,107 @@
+"""Causal flash-attention forward Pallas kernel (train/prefill fast path).
+
+Grid (B*H, nq, nk): online-softmax accumulation in VMEM scratch; KV blocks
+stream HBM->VMEM; fully-masked blocks are skipped (pl.when) — the compile
+-time-visible version of the causal-skip optimization. GQA is handled in
+the k/v index_map (q head -> kv head), so KV is never materialized per
+q-head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_blk, k_blk, v_blk, o_blk, m_scr, l_scr, acc_scr,
+            *, qb, kb, nk, causal, scale):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = i * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    k_pos = j * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    live = (not causal) or (j * kb <= i * qb + qb - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_blk[0].astype(jnp.float32)            # (qb, D)
+        k = k_blk[0].astype(jnp.float32)            # (kb, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]                          # (qb, 1)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_blk[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)
+        o_blk[0] = out.astype(o_blk.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = True):
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    assert S % qb == 0 and T % kb == 0
+    nq, nk = S // qb, T // kb
+    scale = 1.0 / math.sqrt(D)
+
+    q3 = q.reshape(B * H, S, D)
+
+    def qmap(bh, i, j):
+        return bh, i, 0
+
+    def kvmap(bh, i, j):
+        b, h = bh // H, bh % H
+        return b * Hkv + h // G, j, 0
+
+    k3 = k.reshape(B * Hkv, T, D)
+    v3 = v.reshape(B * Hkv, T, D)
+
+    kern = functools.partial(_kernel, qb=qb, kb=kb, nk=nk,
+                             causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, D), qmap),
+            pl.BlockSpec((1, kb, D), kvmap),
+            pl.BlockSpec((1, kb, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, qb, D), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(B, H, S, D)

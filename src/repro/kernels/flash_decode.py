@@ -1,0 +1,121 @@
+"""Decode attention Pallas kernel over a (local) KV-cache slice.
+
+Emits per-shard PARTIALS (o, l, m) — the Fsum payload that crosses the
+network in DisaggRec's near-memory-reduction scheme; the cross-shard
+combine (layers.combine_partials) runs outside. The current position is
+scalar-prefetched so future cache slots are masked without host sync.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_blk, k_blk, v_blk, o_blk, l_blk, m_blk,
+            m_scr, l_scr, acc_scr, *, kb, nk, kv_offset, scale):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    blk_start = kv_offset + j * kb
+
+    @pl.when(blk_start <= pos)
+    def _compute():
+        q = q_blk[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_blk[0, :, 0].astype(jnp.float32)       # (kb, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, kb)
+        t = blk_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(t <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_blk[0, :, 0].astype(jnp.float32)       # (kb, D)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        o_blk[0, 0] = acc_scr[...].astype(o_blk.dtype)
+        l_blk[0, 0] = l_scr[..., 0].astype(l_blk.dtype)
+        m_blk[0, 0] = m_scr[..., 0].astype(m_blk.dtype)
+
+
+def flash_decode_partial(q, k_cache, v_cache, pos, *, kv_offset: int = 0,
+                         kv_block: int = 256, interpret: bool = True):
+    """q: (B, H, D); caches: (B, T, Hkv, D); pos: scalar int32.
+
+    Returns partials (o (B,H,D) f32 UNNORMALIZED, l (B,H) f32, m (B,H)
+    f32) for combine_partials.
+    """
+    B, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    kb = min(kv_block, T)
+    assert T % kb == 0
+    nk = T // kb
+    scale = 1.0 / math.sqrt(D)
+
+    q4 = q.reshape(B, Hkv, G, D)
+
+    def qmap(b, h, j, pos_ref):
+        return b, h, 0, 0
+
+    def kvmap(b, h, j, pos_ref):
+        return b, j, h, 0
+
+    def outmap(b, h, j, pos_ref):
+        return b, h, 0, 0
+
+    def lmmap(b, h, j, pos_ref):
+        return b, h, 0
+
+    kern = functools.partial(_kernel, kb=kb, nk=nk, kv_offset=kv_offset,
+                             scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), qmap),
+            pl.BlockSpec((1, kb, 1, D), kvmap),
+            pl.BlockSpec((1, kb, 1, D), kvmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), outmap),
+            pl.BlockSpec((1, 1, G), lmmap),
+            pl.BlockSpec((1, 1, G), lmmap),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    o, l, m = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q4, k_cache, v_cache)
+    return (o.reshape(B, H, D), l.reshape(B, H), m.reshape(B, H))

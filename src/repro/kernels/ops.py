@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the Pallas body
+executes as traced JAX); on TPU pass interpret=False (the default flips
+on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(tables, idx, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _eb.embedding_bag(tables, idx, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, q_block=q_block,
+                               kv_block=kv_block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_offset", "kv_block",
+                                             "interpret"))
+def flash_decode_partial(q, k_cache, v_cache, pos, kv_offset: int = 0,
+                         kv_block: int = 256, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fd.flash_decode_partial(q, k_cache, v_cache, pos,
+                                    kv_offset=kv_offset,
+                                    kv_block=kv_block, interpret=interpret)

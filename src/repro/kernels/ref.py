@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every kernel (the test ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(tables, idx):
+    """tables: (T, R, D); idx: (B, T, P) int32 (-1 pad) -> (B, T, D)."""
+    from repro.models.dlrm import embedding_bag_ref as _ref
+    return _ref(tables, idx)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,S,D); k/v: (B,Hkv,T,D) -> (B,H,S,D) full softmax."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(T)[None, :]
+        s = jnp.where(qp >= kp, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos, kv_offset: int = 0):
+    """Partial decode attention (unnormalized o, l, m) — mirrors
+    layers.decode_attention_local."""
+    from repro.models.layers import decode_attention_local
+    return decode_attention_local(q, k_cache, v_cache, pos,
+                                  kv_offset=kv_offset)
+
+
+def decode_attention_full_ref(q, k_cache, v_cache, pos):
+    """Normalized single-shard decode attention output."""
+    from repro.models.layers import combine_partials, decode_attention_local
+    o, l, m = decode_attention_local(q, k_cache, v_cache, pos)
+    return combine_partials(o, l, m, None)

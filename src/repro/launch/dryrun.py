@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary.
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_program  # noqa: E402
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell
+on the production mesh with 512 placeholder host devices; record memory
+analysis, cost analysis and the collective traffic for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --mesh both --out results/dryrun
+"""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rule_overrides=None, microbatches: int = 1,
+             dump_hlo: str = None) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jitted, args, rules = build_program(
+        cfg, shape, mesh, rule_overrides=rule_overrides,
+        microbatches=microbatches)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "devices": mesh.devices.size,
+    }
+    try:
+        out["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        out["memory"]["total_per_device_bytes"] = (
+            out["memory"]["argument_bytes"] + out["memory"]["output_bytes"]
+            + out["memory"]["temp_bytes"] - out["memory"]["alias_bytes"])
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = str(e)
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out["cost"] = {k: float(v) for k, v in (cost or {}).items()
+                   if isinstance(v, (int, float)) and (
+                       k in ("flops", "bytes accessed", "transcendentals")
+                       or k.startswith("bytes accessed"))}
+
+    # collective traffic + loop-scaled cost for the roofline (§Roofline)
+    from benchmarks.roofline import collective_bytes_from_hlo, hlo_cost_scaled
+    try:
+        hlo = compiled.as_text()
+        out["collectives"] = collective_bytes_from_hlo(hlo)
+        out["hlo_scaled"] = hlo_cost_scaled(hlo)
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+    except Exception as e:  # pragma: no cover
+        out["collectives_error"] = str(e)
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--out", default=None, help="directory for JSON records")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--dump-hlo", default=None)
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args(argv)
+
+    archs = configs.ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                if args.skip_existing and args.out:
+                    fn = (f"{arch.replace('.', '_')}__{shape}__"
+                          f"{'multi' if multi else 'single'}.json")
+                    path = os.path.join(args.out, fn)
+                    if os.path.exists(path):
+                        with open(path) as f:
+                            old = json.load(f)
+                        if old.get("status") in ("ok", "skip"):
+                            print(f"[dryrun] {tag}: cached "
+                                  f"({old['status']})")
+                            continue
+                try:
+                    rec = run_cell(arch, shape, multi,
+                                   microbatches=args.microbatches,
+                                   dump_hlo=args.dump_hlo)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": str(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                print(f"[dryrun] {tag}: {rec['status']}"
+                      + (f" ({rec.get('reason', rec.get('error', ''))[:120]})"
+                         if rec["status"] != "ok" else
+                         f" mem/device={rec.get('memory', {}).get('total_per_device_bytes', 0)/2**30:.2f}GiB"
+                         f" flops={rec.get('cost', {}).get('flops', 0):.3g}"))
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = f"{arch.replace('.', '_')}__{shape}__{rec['mesh']}.json"
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

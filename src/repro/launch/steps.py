@@ -1,0 +1,95 @@
+"""Step builders: jit-with-shardings for train / prefill / decode.
+
+Shared by the dry-run (lower+compile on the production mesh) and the
+real drivers (train.py / serve.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import registry
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import make_train_step
+
+
+def build_program(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  opt_cfg: Optional[OptConfig] = None,
+                  rule_overrides: Optional[Dict] = None,
+                  microbatches: int = 1):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs), rules).
+
+    train  : step(params, opt_state, batch)
+    prefill: fn(params, batch) -> (logits, cache)
+    decode : fn(params, cache, batch) -> (logits, cache)
+    """
+    model = registry.build(cfg)
+    mode = registry.mode_for_shape(shape)
+    rules = registry.make_rules(cfg, mesh, mode, overrides=rule_overrides)
+    opt_cfg = opt_cfg or OptConfig()
+
+    from jax.sharding import NamedSharding
+
+    with shd.use_mesh(mesh, rules):
+        pshapes = model.param_shapes()
+        pshard = shd.tree_shardings_for_shapes(model.param_specs(), pshapes)
+        in_specs = model.input_specs(shape)
+        in_logical = model.input_logical(shape)
+        ishard = {k: (NamedSharding(mesh, shd.resolve_for_shape(
+                          in_logical.get(k) or (None,) * len(v.shape),
+                          v.shape)) if mesh is not None else None)
+                  for k, v in in_specs.items()}
+
+        if mode == "train":
+            ostate_specs = opt_mod.state_specs(opt_cfg, model.param_specs(),
+                                               pshapes)
+            oshard = shd.tree_shardings(ostate_specs)
+            oshapes = jax.eval_shape(
+                lambda: opt_mod.init_state(
+                    opt_cfg,
+                    jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 pshapes)))
+            raw = make_train_step(model, opt_cfg, microbatches=microbatches)
+
+            def step(params, opt_state, batch):
+                with shd.use_mesh(mesh, rules):
+                    return raw(params, opt_state, batch)
+
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, ishard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            return jitted, (pshapes, oshapes, in_specs), rules
+
+        if mode == "prefill":
+            cshard = shd.tree_shardings_for_shapes(
+                model.cache_logical(shape), model.cache_specs(shape))
+
+            def fn(params, batch):
+                with shd.use_mesh(mesh, rules):
+                    return model.prefill(params, batch,
+                                         cache_len=shape.seq_len)
+
+            jitted = jax.jit(fn, in_shardings=(pshard, ishard),
+                             out_shardings=(None, cshard))
+            return jitted, (pshapes, in_specs), rules
+
+        # decode
+        cshapes = model.cache_specs(shape)
+        cshard = shd.tree_shardings_for_shapes(
+            model.cache_logical(shape), cshapes)
+
+        def fn(params, cache, batch):
+            with shd.use_mesh(mesh, rules):
+                return model.decode_step(params, cache, batch)
+
+        jitted = jax.jit(fn, in_shardings=(pshard, cshard, ishard),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(1,))
+        return jitted, (pshapes, cshapes, in_specs), rules

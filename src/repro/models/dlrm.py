@@ -1,0 +1,140 @@
+"""DLRM-style recommendation model (the paper's RM1/RM2).
+
+Pipeline (paper Fig. 1a): preprocessing G_P (hashing, done in the data
+layer) -> SparseNet G_S (embedding bags: gather + pooling) -> DenseNet G_D
+(bottom MLP, pairwise interaction, top MLP).
+
+DisaggRec mapping: the stacked embedding tables shard table-wise over the
+``model`` mesh axis (the MN pool; assignment computed by
+core/embedding_manager's greedy allocator) and — for TB-scale generations —
+row-wise over ``data`` as well, since one pod's HBM per model-group is
+smaller than a DRAM memory node. Pooling (the Fsum reduction) happens
+*shard-local* before any cross-device traffic: only (B, T, D) pooled
+vectors cross the network, never (B, T, P, D) raw rows. That is the
+paper's near-memory reduction, realized on TPU as a VMEM-local reduction
+(see kernels/embedding_bag for the Pallas version).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import params as pm
+from repro.models.params import Spec
+
+
+def _mlp_tables(dims, prefix_names=("embed", None)):
+    t = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        t[f"w{i}"] = Spec((a, b), (None, None))
+        t[f"b{i}"] = Spec((b,), (None,), "zeros")
+    return t
+
+
+def _mlp_apply(t, x, n):
+    for i in range(n):
+        x = x @ t[f"w{i}"] + t[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def embedding_bag_ref(tables, idx):
+    """tables: (T, R, D); idx: (B, T, P) -> pooled (B, T, D).
+
+    Shard-local gather+sum; -1 indices are padding (masked out).
+    """
+    valid = (idx >= 0)[..., None]
+    safe = jnp.maximum(idx, 0)
+
+    def per_table(table, ix):              # (R, D), (B, P)
+        return jnp.take(table, ix, axis=0)  # (B, P, D)
+
+    rows = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(tables, safe)
+    return jnp.where(valid, rows, 0.0).sum(axis=2)
+
+
+class DLRMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        r = cfg.dlrm
+        self.num_feats = r.interaction_proj + 1
+        self.inter = self.num_feats * (self.num_feats - 1) // 2
+
+    def _tables(self):
+        r = self.cfg.dlrm
+        bot = (r.num_dense_features,) + r.bottom_mlp
+        top = (r.bottom_mlp[-1] + self.inter,) + r.top_mlp
+        return {
+            "embed": Spec((r.num_tables, r.rows_per_table, r.embed_dim),
+                          ("table_shard", "table_rows", None), "normal:0.01"),
+            "proj": Spec((r.num_tables, r.interaction_proj), (None, None),
+                         "normal:0.05"),
+            "bottom": _mlp_tables(bot),
+            "top": _mlp_tables(top),
+        }
+
+    def init(self, seed: int = 0):
+        # DLRM tables are served fp32 (as in the paper's production stack)
+        return pm.init_table(jax.random.PRNGKey(seed), self._tables(),
+                             jnp.float32)
+
+    def param_specs(self):
+        return pm.table_specs(self._tables())
+
+    def param_shapes(self, dtype=None):
+        return pm.eval_shape_tree(self._tables(), dtype=dtype or jnp.float32)
+
+    def param_count(self):
+        return pm.table_size(self._tables())
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch):
+        r = self.cfg.dlrm
+        dense, idx = batch["dense"], batch["indices"]
+        bot = _mlp_apply(params["bottom"], dense, len(r.bottom_mlp))
+        pooled = embedding_bag_ref(params["embed"], idx)        # (B,T,D)
+        pooled = shd.lsc(pooled, "batch", None, None)           # Fsum gather
+        pooled = jnp.einsum("btd,tk->bkd", pooled, params["proj"])
+        z = jnp.concatenate([bot[:, None, :], pooled], axis=1)  # (B,K+1,D)
+        zz = jnp.einsum("bfd,bgd->bfg", z, z)
+        iu = jnp.triu_indices(self.num_feats, k=1)
+        inter = zz[:, iu[0], iu[1]]                             # (B, F(F-1)/2)
+        x = jnp.concatenate([bot, inter], axis=-1)
+        return _mlp_apply(params["top"], x, len(r.top_mlp))[..., 0]
+
+    def loss(self, params, batch):
+        logit = self.forward(params, batch)
+        y = batch["labels"].astype(jnp.float32)
+        z = logit.astype(jnp.float32)
+        # stable BCE-with-logits
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    def serve_step(self, params, batch):
+        return jax.nn.sigmoid(self.forward(params, batch))
+
+    # -------------------------------------------------------------- specs
+    def input_specs(self, shape_or_batch):
+        r = self.cfg.dlrm
+        if isinstance(shape_or_batch, ShapeConfig):
+            B = shape_or_batch.global_batch
+            kind = shape_or_batch.kind
+        else:
+            B, kind = shape_or_batch, "train"
+        spec = {
+            "dense": jax.ShapeDtypeStruct((B, r.num_dense_features),
+                                          jnp.float32),
+            "indices": jax.ShapeDtypeStruct(
+                (B, r.num_tables, r.avg_pooling), jnp.int32),
+        }
+        if kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return spec
+
+    def input_logical(self, shape=None):
+        return {"dense": ("batch", None), "indices": ("batch", None, None),
+                "labels": ("batch",)}

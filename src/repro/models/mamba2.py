@@ -1,0 +1,418 @@
+"""Mamba2 (SSD) block + Zamba2 hybrid stack.
+
+Zamba2 structure: groups of 6 Mamba2 layers, one *shared* attention+MLP
+block applied after each group (weights reused across all 13 applications,
+as in the paper's shared-block design), plus a tail of leftover Mamba2
+layers (81 = 13*6 + 3).
+
+Sharding: d_inner (x/z projections, conv, heads) shards over ``model``
+(112 heads / 16 = 7 local heads, head_dim 64 stays MXU-aligned); B/C/dt
+are small and replicated; out_proj is row-parallel (one psum). SSD uses
+the chunked algorithm — O(S·Q) memory, scalar-per-head decay.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import params as pm
+from repro.models import transformer as tfm
+from repro.models.params import Spec
+
+
+# --------------------------------------------------------------- tables
+
+
+def mamba2_table(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    return {
+        "norm": L.norm_table(d),
+        "in_x": Spec((d, di), ("embed", "ffn")),
+        "in_z": Spec((d, di), ("embed", "ffn")),
+        "in_bc": Spec((d, 2 * s.d_state), ("embed", None)),
+        "in_dt": Spec((d, nh), ("embed", "mamba_heads")),
+        "conv_x": Spec((s.conv_width, di), ("conv", "ffn"), "normal:0.5"),
+        "conv_bc": Spec((s.conv_width, 2 * s.d_state), ("conv", None), "normal:0.5"),
+        "A_log": Spec((nh,), ("mamba_heads",), "zeros"),
+        "D": Spec((nh,), ("mamba_heads",), "ones"),
+        "dt_bias": Spec((nh,), ("mamba_heads",), "zeros"),
+        "gnorm": Spec((di,), ("ffn",), "zeros"),
+        "out": Spec((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv. u: (B,S,C), w: (W,C). Returns (y, new_state)
+    where state carries the last W-1 inputs for decode."""
+    W = w.shape[0]
+    if state is None:
+        pads = [jnp.zeros_like(u[:, :1]).repeat(W - 1, axis=1)]
+        ext = jnp.concatenate(pads + [u], axis=1)
+    else:
+        ext = jnp.concatenate([state, u], axis=1)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return y, ext[:, -(W - 1):]
+
+
+def _segsum(a):
+    """a: (..., Q). Returns (..., Q, Q) lower-tri pairwise sums
+    cum[t]-cum[s] for s<=t (exclusive of a[s], inclusive of a[t])."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD (Mamba2) chunked scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), h_final: (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = L.pick_block(S, chunk)
+    nc = S // Q
+
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+    a = dtr * A                                    # (B,nc,Q,H) negative
+    xdt = xr * dtr[..., None]
+
+    cum = jnp.cumsum(a, axis=2)                    # (B,nc,Q,H)
+    # intra-chunk
+    Lm = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))         # (B,nc,H,Q,Q)
+    att = jnp.einsum("bcqn,bcsn,bchqs->bchqs", Cr, Br, Lm)
+    y = jnp.einsum("bchqs,bcshp->bcqhp", att, xdt)
+    # chunk -> state
+    decay_st = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Br, decay_st, xdt)
+    # inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def step(h, sd):
+        s_c, dec = sd                              # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr,
+                       h_prevs.astype(Cr.dtype), jnp.exp(cum))
+    y = (y + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_fin
+
+
+def mamba2_apply(p, x, cfg, *, ssm_state=None, conv_state=None):
+    """Full-sequence (train/prefill) or single-step (decode) Mamba2.
+
+    Decode when x has S==1 and states are provided.
+    """
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    B, S, _ = x.shape
+
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", h, p["in_z"])
+    bc = jnp.einsum("bsd,de->bse", h, p["in_bc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", h, p["in_dt"])
+
+    xz, conv_state_x = _causal_conv(
+        xz, p["conv_x"], None if conv_state is None else conv_state["x"])
+    bc, conv_state_bc = _causal_conv(
+        bc, p["conv_bc"], None if conv_state is None else conv_state["bc"])
+    xz = jax.nn.silu(xz.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    Bm, Cm = bc[..., :s.d_state], bc[..., s.d_state:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xz.reshape(B, S, nh, s.head_dim)
+
+    if S == 1 and ssm_state is not None:
+        # recurrent decode step
+        a = jnp.exp(dt[:, 0] * A)                          # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0],
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        h_new = ssm_state * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h_new.astype(Cm.dtype))
+        y = y[:, None].reshape(B, 1, nh, s.head_dim)
+        h_fin = h_new
+    else:
+        y, h_fin = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, h0=ssm_state)
+
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["gnorm"], cfg.norm_eps)
+    y = shd.lsc(y, "batch", "seq", "ffn")
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    new_conv = {"x": conv_state_x, "bc": conv_state_bc}
+    res = shd.lsc(x + out, "batch", "seq_sp", "embed")
+    return res, h_fin, new_conv
+
+
+# --------------------------------------------------------------- zamba2
+
+
+class Zamba2Model:
+    """Hybrid: 13 groups of (6 mamba + shared attn/mlp block) + 3 mamba."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.vp = tfm.padded_vocab(cfg.vocab_size)
+        k = cfg.ssm.attn_every
+        self.n_groups = cfg.num_layers // k if k else 0
+        self.group = k
+        self.tail = cfg.num_layers - self.n_groups * k
+        self._lm = tfm.DecoderLM(cfg)   # reuse attention/mlp/loss pieces
+
+    # params -----------------------------------------------------------
+    def _attn_block_table(self):
+        cfg = self.cfg
+        return {
+            "ln1": L.norm_table(cfg.d_model),
+            "attn": L.attn_table(cfg),
+            "ln2": L.norm_table(cfg.d_model),
+            "mlp": L.mlp_table(cfg.d_model, cfg.d_ff),
+        }
+
+    def _top_table(self):
+        return {
+            "embed": L.embed_table(self.vp, self.cfg.d_model),
+            "final_norm": L.norm_table(self.cfg.d_model),
+            "head": L.head_table(self.vp, self.cfg.d_model),
+        }
+
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        params = pm.init_table(ks[0], self._top_table(), dt)
+        mt = mamba2_table(cfg)
+        grp = pm.init_stacked(ks[1], mt, self.n_groups * self.group, dt)
+        params["groups"] = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.group) + a.shape[1:]), grp)
+        params["tail"] = pm.init_stacked(ks[2], mt, self.tail, dt)
+        params["shared_attn"] = pm.init_table(ks[3], self._attn_block_table(), dt)
+        return params
+
+    def param_specs(self):
+        mt = mamba2_table(self.cfg)
+        specs = pm.table_specs(self._top_table())
+        specs["groups"] = pm.table_specs(mt, prefix=("layers", "layers"))
+        specs["tail"] = pm.table_specs(mt, prefix=("layers",))
+        specs["shared_attn"] = pm.table_specs(self._attn_block_table())
+        return specs
+
+    def param_shapes(self, dtype=None):
+        dt = dtype or jnp.dtype(self.cfg.param_dtype)
+        mt = mamba2_table(self.cfg)
+        shapes = pm.eval_shape_tree(self._top_table(), dtype=dt)
+        g = pm.eval_shape_tree(mt, stack=self.group, dtype=dt)
+        shapes["groups"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n_groups,) + s.shape, dt), g)
+        shapes["tail"] = pm.eval_shape_tree(mt, stack=self.tail, dtype=dt)
+        shapes["shared_attn"] = pm.eval_shape_tree(
+            self._attn_block_table(), dtype=dt)
+        return shapes
+
+    def param_count(self):
+        n = pm.table_size(self._top_table())
+        n += pm.table_size(mamba2_table(self.cfg)) * self.cfg.num_layers
+        n += pm.table_size(self._attn_block_table())
+        return n
+
+    # forward ----------------------------------------------------------
+    def _attn_block(self, ap, x, pos):
+        cfg = self.cfg
+        h, kv = self._lm._attention(
+            ap["attn"], L.rmsnorm(x, ap["ln1"], cfg.norm_eps), pos)
+        x = x + h
+        x = x + L.mlp_apply(ap["mlp"], L.rmsnorm(x, ap["ln2"], cfg.norm_eps))
+        return shd.lsc(x, "batch", "seq_sp", "embed"), kv
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        x = shd.lsc(x, "batch", "seq_sp", "embed")
+        pos = jnp.arange(x.shape[1])
+
+        def mamba_scan(x, stacked):
+            def body(x, lp):
+                y, _, _ = mamba2_apply(lp, x, cfg)
+                return y, None
+            y, _ = jax.lax.scan(tfm._remat(body, cfg.remat), x, stacked)
+            return y
+
+        def group_body(x, gp):
+            x = mamba_scan(x, gp)
+            x, _ = self._attn_block(params["shared_attn"], x, pos)
+            return x, None
+
+        x, _ = jax.lax.scan(tfm._remat(group_body, cfg.remat),
+                            x, params["groups"])
+        x = mamba_scan(x, params["tail"])
+        return L.rmsnorm(x, params["final_norm"], cfg.norm_eps), 0.0
+
+    def loss(self, params, batch):
+        x, _ = self.forward(params, batch)
+        logits_fn = lambda xc: shd.lsc(
+            L.unembed(xc, params["head"], tied=False), "batch", "seq", "vocab")
+        ce = tfm.cross_entropy(logits_fn(x), batch["labels"], self.cfg.vocab_size)
+        return ce.mean()
+
+    # serving ----------------------------------------------------------
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        pos = jnp.arange(x.shape[1])
+        S = x.shape[1]
+
+        def mamba_scan(x, stacked):
+            def body(x, lp):
+                y, h_fin, conv = mamba2_apply(lp, x, cfg)
+                return y, (h_fin, conv)
+            return jax.lax.scan(body, x, stacked)
+
+        def group_body(x, gp):
+            x, st = mamba_scan(x, gp)
+            x, (k, v) = self._attn_block(params["shared_attn"], x, pos)
+            return x, (st, (k.astype(jnp.dtype(cfg.dtype)),
+                            v.astype(jnp.dtype(cfg.dtype))))
+
+        x, (g_states, (ks, vs)) = jax.lax.scan(group_body, x, params["groups"])
+        x, t_states = mamba_scan(x, params["tail"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x[:, -1:], params["head"], tied=False)
+        ks = tfm.pad_cache(ks, cache_len)
+        vs = tfm.pad_cache(vs, cache_len)
+        cache = {
+            "attn_k": shd.lsc(ks, "layers", "batch", "kv_seq", "cache_heads", "head_dim"),
+            "attn_v": shd.lsc(vs, "layers", "batch", "kv_seq", "cache_heads", "head_dim"),
+            "group_ssm": g_states[0], "group_conv": g_states[1],
+            "tail_ssm": t_states[0], "tail_conv": t_states[1],
+            "pos": jnp.full((), S - 1, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        pos = cache["pos"] + 1
+
+        def mamba_step_scan(x, stacked, ssm, conv):
+            def body(x, lc):
+                lp, h0, cv = lc
+                y, h_fin, cv2 = mamba2_apply(lp, x, cfg, ssm_state=h0,
+                                             conv_state=cv)
+                return y, (h_fin, cv2)
+            return jax.lax.scan(body, x, (stacked, ssm, conv))
+
+        def group_body(carry, gkv):
+            x, ks, vs, i = carry
+            gp, ssm, conv = gkv
+            kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            x, st = mamba_step_scan(x, gp, ssm, conv)
+            ap = params["shared_attn"]
+            h = L.rmsnorm(x, ap["ln1"], cfg.norm_eps)
+            h, kc, vc = self._lm._decode_attention(ap["attn"], h, pos, kc, vc)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+            x = x + h
+            x = x + L.mlp_apply(ap["mlp"], L.rmsnorm(x, ap["ln2"], cfg.norm_eps))
+            return (x, ks, vs, i + 1), st
+
+        (x, ks, vs, _), g_st = jax.lax.scan(
+            group_body,
+            (x, cache["attn_k"], cache["attn_v"], jnp.zeros((), jnp.int32)),
+            (params["groups"], cache["group_ssm"], cache["group_conv"]))
+        x, t_st = mamba_step_scan(x, params["tail"], cache["tail_ssm"],
+                                  cache["tail_conv"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x, params["head"], tied=False)
+        new_cache = {
+            "attn_k": ks, "attn_v": vs,
+            "group_ssm": g_st[0], "group_conv": g_st[1],
+            "tail_ssm": t_st[0], "tail_conv": t_st[1],
+            "pos": pos,
+        }
+        return logits, new_cache
+
+    # specs -------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok((B, S)), "labels": tok((B, S))}
+        if shape.kind == "prefill":
+            return {"tokens": tok((B, S))}
+        return {"tokens": tok((B, 1))}
+
+    def input_logical(self, shape: ShapeConfig):
+        out = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        return out
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg, s = self.cfg, self.cfg.ssm
+        B, T = shape.global_batch, shape.seq_len
+        di = s.expand * cfg.d_model
+        nh = di // s.head_dim
+        kv, D = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        f32 = jnp.float32
+        ssm = lambda lead: jax.ShapeDtypeStruct(
+            lead + (B, nh, s.head_dim, s.d_state), f32)
+        conv_x = lambda lead: jax.ShapeDtypeStruct(
+            lead + (B, s.conv_width - 1, di), dt)
+        conv_bc = lambda lead: jax.ShapeDtypeStruct(
+            lead + (B, s.conv_width - 1, 2 * s.d_state), dt)
+        g = (self.n_groups, self.group)
+        t = (self.tail,)
+        return {
+            "attn_k": jax.ShapeDtypeStruct((self.n_groups, B, T, kv, D), dt),
+            "attn_v": jax.ShapeDtypeStruct((self.n_groups, B, T, kv, D), dt),
+            "group_ssm": ssm(g), "group_conv": {"x": conv_x(g), "bc": conv_bc(g)},
+            "tail_ssm": ssm(t), "tail_conv": {"x": conv_x(t), "bc": conv_bc(t)},
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical(self, shape: ShapeConfig):
+        kvspec = ("layers", "batch", "kv_seq", "cache_heads", "head_dim")
+        return {
+            "attn_k": kvspec, "attn_v": kvspec,
+            "group_ssm": ("layers", "layers", "batch", "mamba_heads", None, None),
+            "group_conv": {"x": ("layers", "layers", "batch", None, "ffn"),
+                           "bc": ("layers", "layers", "batch", None, None)},
+            "tail_ssm": ("layers", "batch", "mamba_heads", None, None),
+            "tail_conv": {"x": ("layers", "batch", None, "ffn"),
+                          "bc": ("layers", "batch", None, None)},
+            "pos": (),
+        }
+
+    def init_cache(self, shape: ShapeConfig):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(shape))

@@ -1,0 +1,87 @@
+"""Declarative parameter tables.
+
+A *table* is a nested dict whose leaves are ``Spec(shape, names, init)``.
+From one table we derive: initialized arrays (optionally vmapped/stacked
+for scan-over-layers), logical sharding specs, and analytic sizes — so the
+full-size dry-run never materializes parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    names: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | const:<v> | normal:<scale>
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_leaf(key, spec: Spec, dtype) -> jax.Array:
+    kind = spec.init
+    if kind == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if kind == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if kind.startswith("const:"):
+        return jnp.full(spec.shape, float(kind.split(":")[1]), dtype)
+    if kind.startswith("normal:"):
+        scale = float(kind.split(":")[1])
+    else:
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_table(key, table, dtype) -> Dict:
+    """Initialize a (nested) table of Specs into arrays."""
+    leaves, treedef = jax.tree.flatten(table, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def init_stacked(key, table, num: int, dtype) -> Dict:
+    """Initialize `num` copies stacked on axis 0 (for lax.scan layers)."""
+    keys = jax.random.split(key, num)
+    return jax.vmap(lambda k: init_table(k, table, dtype))(keys)
+
+
+def table_specs(table, prefix: Tuple[Optional[str], ...] = ()) -> Dict:
+    """Logical-name tuples tree matching the table's array tree."""
+    return jax.tree.map(lambda s: tuple(prefix) + tuple(s.names), table,
+                        is_leaf=_is_spec)
+
+
+def table_shapes(table, stack: int = 0) -> Dict:
+    def f(s: Spec):
+        shape = ((stack,) + s.shape) if stack else s.shape
+        return shape
+    return jax.tree.map(f, table, is_leaf=_is_spec)
+
+
+def table_size(table, stack: int = 1) -> int:
+    n = 0
+    for s in jax.tree.leaves(table, is_leaf=_is_spec):
+        n += math.prod(s.shape)
+    return n * max(stack, 1)
+
+
+def eval_shape_tree(table, stack: int = 0, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs without allocation (dry-run path)."""
+    def f(s: Spec):
+        shape = ((stack,) + s.shape) if stack else s.shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.tree.map(f, table, is_leaf=_is_spec)

@@ -1,0 +1,311 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Recurrence (per head, K=V=head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+
+Train/prefill uses an outer chunk scan (remat per chunk bounds residual
+memory) with an inner sequential scan; decode carries (S, prev-x) state —
+O(1) per token, which is why this arch runs the long_500k shape.
+
+DisaggRec applicability (DESIGN.md §Arch-applicability): the recurrent
+core has no gather/Fsum structure; the paper's technique applies to this
+arch only via embedding/LM-head sharding and the serving/allocation layer.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import params as pm
+from repro.models import transformer as tfm
+from repro.models.params import Spec
+
+_LORA = 32
+
+
+def rwkv6_table(cfg: ModelConfig) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": L.norm_table(d),
+        "ln2": L.norm_table(d),
+        "tm": {  # time mix
+            "x_maa": Spec((d,), ("embed",), "zeros"),
+            "maa": Spec((5, d), (None, "embed"), "zeros"),
+            "maa_w1": Spec((d, 5 * _LORA), ("embed", None), "normal:0.02"),
+            "maa_w2": Spec((5, _LORA, d), (None, None, "embed"), "normal:0.02"),
+            "decay": Spec((d,), ("embed",), "const:-6.0"),
+            "decay_w1": Spec((d, _LORA), ("embed", None), "normal:0.02"),
+            "decay_w2": Spec((_LORA, d), (None, "embed"), "normal:0.02"),
+            "u": Spec((d,), ("embed",), "zeros"),
+            "wr": Spec((d, d), ("attn_din", "rwkv_out")),
+            "wk": Spec((d, d), ("attn_din", "rwkv_out")),
+            "wv": Spec((d, d), ("attn_din", "rwkv_out")),
+            "wg": Spec((d, d), ("attn_din", "rwkv_out")),
+            "wo": Spec((d, d), ("attn_din", "rwkv_out")),
+            "ln_x_w": Spec((d,), ("embed",), "zeros"),
+            "ln_x_b": Spec((d,), ("embed",), "zeros"),
+        },
+        "cm": {  # channel mix
+            "k_maa": Spec((d,), ("embed",), "zeros"),
+            "r_maa": Spec((d,), ("embed",), "zeros"),
+            "wk": Spec((d, dff), ("embed", "ffn")),
+            "wv": Spec((dff, d), ("ffn", "embed")),
+            "wr": Spec((d, d), ("attn_din", "rwkv_out")),
+        },
+    }
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Sequential WKV. r,k,v,w: (B,S,H,K); u: (H,K); state: (B,H,K,K).
+    Returns (y: (B,S,H,K), final state)."""
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                       # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    Sf, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), Sf
+
+
+def wkv_chunked(r, k, v, w, u, state0, chunk: int, sub: int = 16):
+    """Chunked WKV: outer remat'd scan over chunks; within a chunk a
+    second remat level over sub-chunks bounds AD state-stacking to
+    O(sub + chunk/sub) per-step states instead of O(chunk)."""
+    B, S, H, K = r.shape
+    Q = L.pick_block(S, chunk)
+    nc = S // Q
+    Qs = L.pick_block(Q, sub)
+    ns = Q // Qs
+
+    def sub_body(state, xs):
+        ys, Sf = _wkv_scan(*xs, u, state)
+        return Sf, ys
+
+    def body(state, xs):
+        xs_sub = tuple(t.reshape(B, ns, Qs, H, K).transpose(1, 0, 2, 3, 4)
+                       for t in xs)
+        state, ys = jax.lax.scan(jax.checkpoint(sub_body), state, xs_sub)
+        return state, ys.transpose(1, 0, 2, 3, 4).reshape(B, Q, H, K)
+
+    xs = tuple(t.reshape(B, nc, Q, H, K).transpose(1, 0, 2, 3, 4)
+               for t in (r, k, v, w))
+    Sf, ys = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, K)
+    return y, Sf
+
+
+def _token_shift(x, prev):
+    """prev-token mix. x: (B,S,d); prev: (B,d) carry from decode or zeros."""
+    if x.shape[1] == 1:
+        return prev[:, None, :]
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+    return shifted
+
+
+def time_mix(p, x, cfg, prev_x, state0):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    K = cfg.resolved_head_dim
+    xx = _token_shift(x, prev_x)
+    sx = xx - x
+    xxx = x + sx * p["x_maa"]
+    m = jnp.tanh(xxx @ p["maa_w1"]).reshape(B, S, 5, _LORA)
+    m = jnp.einsum("bsfl,fld->bsfd", m, p["maa_w2"])
+    xw, xk, xv, xr, xg = [
+        x + sx * (p["maa"][i] + m[:, :, i]) for i in range(5)]
+
+    wr = shd.lsc(p["wr"], "attn_din_c", "rwkv_out_c")
+    wk_ = shd.lsc(p["wk"], "attn_din_c", "rwkv_out_c")
+    wv_ = shd.lsc(p["wv"], "attn_din_c", "rwkv_out_c")
+    wg_ = shd.lsc(p["wg"], "attn_din_c", "rwkv_out_c")
+    wo_ = shd.lsc(p["wo"], "attn_din_c", "rwkv_out_c")
+
+    r = (xr @ wr).reshape(B, S, H, K)
+    kk = (xk @ wk_).reshape(B, S, H, K)
+    vv = (xv @ wv_).reshape(B, S, H, K)
+    g = jax.nn.silu((xg @ wg_).astype(jnp.float32)).astype(x.dtype)
+
+    dec = p["decay"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, H, K)
+    u = p["u"].reshape(H, K).astype(jnp.float32)
+
+    y, Sf = wkv_chunked(r.astype(jnp.float32), kk.astype(jnp.float32),
+                        vv.astype(jnp.float32), w, u, state0,
+                        cfg.ssm.chunk)
+    y = y.reshape(B, S, d)
+    # per-head group norm
+    yh = y.reshape(B, S, H, K)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, d) * (1.0 + p["ln_x_w"]) + p["ln_x_b"]
+    out = (y.astype(x.dtype) * g) @ wo_
+    return out, x[:, -1], Sf
+
+
+def channel_mix(p, x, prev_x):
+    xx = _token_shift(x, prev_x)
+    sx = xx - x
+    xk = x + sx * p["k_maa"]
+    xr = x + sx * p["r_maa"]
+    wr = shd.lsc(p["wr"], "attn_din_c", "rwkv_out_c")
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32)))
+    k = shd.lsc(k.astype(x.dtype), "batch", "seq", "ffn")
+    v = k @ p["wv"]
+    r = jax.nn.sigmoid((xr @ wr).astype(jnp.float32)).astype(x.dtype)
+    return r * v, x[:, -1]
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.vp = tfm.padded_vocab(cfg.vocab_size)
+
+    def _top_table(self):
+        return {
+            "embed": L.embed_table(self.vp, self.cfg.d_model),
+            "final_norm": L.norm_table(self.cfg.d_model),
+            "head": L.head_table(self.vp, self.cfg.d_model),
+        }
+
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        params = pm.init_table(k1, self._top_table(), dt)
+        params["layers"] = pm.init_stacked(
+            k2, rwkv6_table(cfg), cfg.num_layers, dt)
+        return params
+
+    def param_specs(self):
+        specs = pm.table_specs(self._top_table())
+        specs["layers"] = pm.table_specs(rwkv6_table(self.cfg),
+                                         prefix=("layers",))
+        return specs
+
+    def param_shapes(self, dtype=None):
+        dt = dtype or jnp.dtype(self.cfg.param_dtype)
+        shapes = pm.eval_shape_tree(self._top_table(), dtype=dt)
+        shapes["layers"] = pm.eval_shape_tree(
+            rwkv6_table(self.cfg), stack=self.cfg.num_layers, dtype=dt)
+        return shapes
+
+    def param_count(self):
+        return (pm.table_size(self._top_table())
+                + pm.table_size(rwkv6_table(self.cfg)) * self.cfg.num_layers)
+
+    def _layer(self, lp, x, tm_state, tm_prev, cm_prev):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        dt_, tm_prev_new, tm_state_new = time_mix(
+            lp["tm"], h, cfg, tm_prev, tm_state)
+        x = x + dt_
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        dc, cm_prev_new = channel_mix(lp["cm"], h, cm_prev)
+        x = shd.lsc(x + dc, "batch", "seq_sp", "embed")
+        return x, tm_state_new, tm_prev_new, cm_prev_new
+
+    def _zero_states(self, B):
+        cfg = self.cfg
+        H, K = cfg.num_heads, cfg.resolved_head_dim
+        tm_state = jnp.zeros((cfg.num_layers, B, H, K, K), jnp.float32)
+        tm_prev = jnp.zeros((cfg.num_layers, B, cfg.d_model),
+                            jnp.dtype(cfg.dtype))
+        cm_prev = jnp.zeros_like(tm_prev)
+        return tm_state, tm_prev, cm_prev
+
+    def forward(self, params, batch, states=None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        x = shd.lsc(x, "batch", "seq", "embed")
+        B = x.shape[0]
+        if states is None:
+            states = self._zero_states(B)
+        tm_state, tm_prev, cm_prev = states
+
+        def body(x, lp_st):
+            lp, st, tp, cp = lp_st
+            y, st2, tp2, cp2 = self._layer(lp, x, st, tp, cp)
+            return y, (st2, tp2, cp2)
+
+        x, new_states = jax.lax.scan(
+            tfm._remat(body, cfg.remat), x,
+            (params["layers"], tm_state, tm_prev, cm_prev))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_states
+
+    def loss(self, params, batch):
+        x, _ = self.forward(params, batch)
+        logits = shd.lsc(L.unembed(x, params["head"], tied=False),
+                         "batch", "seq", "vocab")
+        return tfm.cross_entropy(logits, batch["labels"],
+                                 self.cfg.vocab_size).mean()
+
+    def prefill(self, params, batch, cache_len=None):
+        # recurrent state is O(1): cache_len is irrelevant (accepted for
+        # the uniform Model API)
+        x, (tm_state, tm_prev, cm_prev) = self.forward(params, batch)
+        logits = L.unembed(x[:, -1:], params["head"], tied=False)
+        cache = {"tm_state": tm_state, "tm_prev": tm_prev,
+                 "cm_prev": cm_prev,
+                 "pos": jnp.full((), batch["tokens"].shape[1] - 1, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        states = (cache["tm_state"], cache["tm_prev"], cache["cm_prev"])
+        x, (st, tp, cp) = self.forward(params, batch, states=states)
+        logits = L.unembed(x, params["head"], tied=False)
+        return logits, {"tm_state": st, "tm_prev": tp, "cm_prev": cp,
+                        "pos": cache["pos"] + 1}
+
+    # specs --------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok((B, S)), "labels": tok((B, S))}
+        if shape.kind == "prefill":
+            return {"tokens": tok((B, S))}
+        return {"tokens": tok((B, 1))}
+
+    def input_logical(self, shape: ShapeConfig):
+        out = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        return out
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B = shape.global_batch
+        H, K = cfg.num_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "tm_state": jax.ShapeDtypeStruct(
+                (cfg.num_layers, B, H, K, K), jnp.float32),
+            "tm_prev": jax.ShapeDtypeStruct(
+                (cfg.num_layers, B, cfg.d_model), dt),
+            "cm_prev": jax.ShapeDtypeStruct(
+                (cfg.num_layers, B, cfg.d_model), dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical(self, shape: ShapeConfig):
+        return {
+            "tm_state": ("layers", "batch", None, None, None),
+            "tm_prev": ("layers", "batch", "embed"),
+            "cm_prev": ("layers", "batch", "embed"),
+            "pos": (),
+        }
+
+    def init_cache(self, shape: ShapeConfig):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(shape))

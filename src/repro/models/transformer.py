@@ -1,0 +1,377 @@
+"""Decoder-only transformer LM (dense / MoE / VLM) with:
+
+- scan-over-layers + configurable remat (compile-time + memory sanity at
+  48L/512-device scale),
+- rule-driven sharding (head-TP, FSDP, or decode layouts — see
+  registry.make_rules),
+- flash-style chunked attention for train/prefill,
+- sequence-sharded KV cache decode (DisaggRec Fsum pattern).
+
+The class exposes the framework-wide Model API:
+  init / param_specs / param_shapes / loss / prefill / decode_step /
+  input_specs / cache_specs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import params as pm
+from repro.models.params import Spec
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // 128) * 128
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def pad_cache(kv, cache_len: Optional[int], axis: int = 2):
+    """Pad a stacked (L,B,S,...) prefill cache out to cache_len slots."""
+    if cache_len is None or cache_len <= kv.shape[axis]:
+        return kv
+    pad = [(0, 0)] * kv.ndim
+    pad[axis] = (0, cache_len - kv.shape[axis])
+    return jnp.pad(kv, pad)
+
+
+def cross_entropy(logits, labels, vocab_real: int):
+    """Stable CE with padded-vocab masking. logits fp32 (..., Vp)."""
+    logits = logits.astype(jnp.float32)
+    Vp = logits.shape[-1]
+    if Vp > vocab_real:
+        logits = jnp.where(jnp.arange(Vp) < vocab_real, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    # one-hot reduce (not take_along_axis): partitions over a vocab-sharded
+    # logits dim without an all-gather
+    hit = jnp.arange(Vp) == labels[..., None]
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    return lse - ll
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.vp = padded_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------ params
+    def _layer_table(self) -> dict:
+        cfg = self.cfg
+        t = {
+            "ln1": L.norm_table(cfg.d_model),
+            "attn": L.attn_table(cfg),
+            "ln2": L.norm_table(cfg.d_model),
+        }
+        if cfg.moe is not None:
+            t["moe"] = moe_mod.moe_table(cfg)
+        else:
+            t["mlp"] = L.mlp_table(cfg.d_model, cfg.d_ff)
+        return t
+
+    def _top_table(self) -> dict:
+        cfg = self.cfg
+        t = {
+            "embed": L.embed_table(self.vp, cfg.d_model),
+            "final_norm": L.norm_table(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            t["head"] = L.head_table(self.vp, cfg.d_model)
+        if cfg.family == "vlm":
+            d = cfg.d_model
+            t["mm_proj"] = {
+                "w1": Spec((d, d), ("embed", None)),
+                "b1": Spec((d,), (None,), "zeros"),
+                "w2": Spec((d, d), (None, "embed")),
+                "b2": Spec((d,), ("embed",), "zeros"),
+            }
+        return t
+
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        params = pm.init_table(k1, self._top_table(), dt)
+        params["layers"] = pm.init_stacked(
+            k2, self._layer_table(), cfg.num_layers, dt)
+        return params
+
+    def param_specs(self):
+        specs = pm.table_specs(self._top_table())
+        specs["layers"] = pm.table_specs(self._layer_table(), prefix=("layers",))
+        return specs
+
+    def param_shapes(self, dtype=None):
+        dt = dtype or jnp.dtype(self.cfg.param_dtype)
+        shapes = pm.eval_shape_tree(self._top_table(), dtype=dt)
+        shapes["layers"] = pm.eval_shape_tree(
+            self._layer_table(), stack=self.cfg.num_layers, dtype=dt)
+        return shapes
+
+    def param_count(self) -> int:
+        n = pm.table_size(self._top_table())
+        n += pm.table_size(self._layer_table()) * self.cfg.num_layers
+        return n
+
+    # ----------------------------------------------------------- forward
+    def _attention(self, lp, x, pos):
+        cfg = self.cfg
+        wq = shd.lsc(lp["wq"], "attn_din_c", "heads", "head_dim")
+        wk = shd.lsc(lp["wk"], "attn_din_c", "kv_heads", "head_dim")
+        wv = shd.lsc(lp["wv"], "attn_din_c", "kv_heads", "head_dim")
+        wo = shd.lsc(lp["wo"], "heads", "head_dim", "attn_dout_c")
+        p = dict(lp, wq=wq, wk=wk, wv=wv, wo=wo)
+        q, k, v = L._project_qkv(p, x, cfg, pos)
+        q = shd.lsc(q, "batch", "seq", "heads", "head_dim")
+        kv = (k, v)
+        # GQA + head-TP: expand kv to full (padded) heads so the flash
+        # grouping reshape never splits a sharded head dim across shards
+        G = cfg.padded_heads // cfg.num_kv_heads
+        if G > 1 and shd.resolve(("heads",)) != shd.resolve((None,)):
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            k = shd.lsc(k, "batch", "seq", "heads", "head_dim")
+            v = shd.lsc(v, "batch", "seq", "heads", "head_dim")
+        else:
+            k = shd.lsc(k, "batch", "seq", "kv_heads", "head_dim")
+            v = shd.lsc(v, "batch", "seq", "kv_heads", "head_dim")
+        mesh = shd.current_mesh()
+        if L.use_context_parallel(mesh, q.shape[1]):
+            # FSDP-mode heads: shard q-sequence instead of replicating
+            # the whole attention across the model axis (16x dedup)
+            o = L.context_parallel_attention(q, k, v, mesh, causal=True)
+            o = shd.lsc(o, "batch", "seq_sp", "heads", "head_dim")
+        else:
+            o = L.flash_attention_jnp(q, k, v, causal=True,
+                                      q_block=min(512, q.shape[1]),
+                                      kv_block=min(1024, k.shape[1]))
+            o = shd.lsc(o, "batch", "seq", "heads", "head_dim")
+        mask = L.head_mask(cfg, o.dtype)
+        if mask is not None:
+            o = o * mask[None, None, :, None]
+        out = jnp.einsum("...hk,hkd->...d", o, wo)
+        return out, kv
+
+    def _layer(self, lp, x, pos):
+        cfg = self.cfg
+        h, kv = self._attention(
+            lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), pos)
+        # Megatron-SP: constrain each block's row-parallel output to the
+        # sequence-sharded layout BEFORE the residual add — GSPMD then
+        # emits reduce-scatter (1x payload) instead of all-reduce (2x)
+        h = shd.lsc(h, "batch", "seq_sp", "embed")
+        x = x + h
+        hn = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            hn = shd.lsc(hn, "batch", "seq", "embed")
+            h2, aux = moe_mod.moe_apply(lp["moe"], hn, cfg)
+        else:
+            h2 = shd.lsc(L.mlp_apply(lp["mlp"], hn),
+                         "batch", "seq_sp", "embed")
+            aux = 0.0
+        x = shd.lsc(x + h2, "batch", "seq_sp", "embed")
+        return x, kv, aux
+
+    def _embed_inputs(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        if cfg.family == "vlm":
+            mp = params["mm_proj"]
+            img = batch["images"].astype(x.dtype)
+            img = jnp.tanh(img @ mp["w1"] + mp["b1"]) @ mp["w2"] + mp["b2"]
+            x = jnp.concatenate([img, x], axis=1)
+        x = shd.lsc(x, "batch", "seq_sp", "embed")
+        pos = jnp.arange(x.shape[1])
+        return x, pos
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x, pos = self._embed_inputs(params, batch)
+
+        def body(x, lp):
+            y, _, aux = self._layer(lp, x, pos)
+            return y, aux
+
+        x, auxs = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, jnp.sum(auxs) if cfg.moe is not None else 0.0
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = L.unembed(x, params["embed"], tied=True)
+        else:
+            logits = L.unembed(x, params["head"], tied=False)
+        return shd.lsc(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, aux = self.forward(params, batch)
+        labels, mask = batch["labels"], batch.get("loss_mask")
+        if cfg.family == "vlm":  # loss only over text positions
+            x = x[:, -labels.shape[1]:]
+
+        # vocab-chunked CE over seq to bound fp32 logits memory
+        S = x.shape[1]
+        chunk = min(1024, S)
+        nc = S // chunk if S % chunk == 0 else 1
+        if nc > 1:
+            xs = x.reshape(x.shape[0], nc, chunk, x.shape[-1]).swapaxes(0, 1)
+            ls = labels.reshape(labels.shape[0], nc, chunk).swapaxes(0, 1)
+
+            def ce_chunk(_, xl):
+                xc, lc = xl
+                return None, cross_entropy(
+                    self._logits(params, xc), lc, cfg.vocab_size)
+
+            # remat per chunk: fp32 logits otherwise stack across chunks
+            _, ces = jax.lax.scan(jax.checkpoint(ce_chunk), None, (xs, ls))
+            ce = ces.swapaxes(0, 1).reshape(labels.shape)
+        else:
+            ce = cross_entropy(self._logits(params, x), labels, cfg.vocab_size)
+        if mask is not None:
+            ce = ce * mask
+            denom = jnp.maximum(mask.sum(), 1.0)
+        else:
+            denom = ce.size
+        total = ce.sum() / denom
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_loss * aux
+        return total
+
+    # ----------------------------------------------------------- serving
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """Full-sequence forward; returns (last_logits, cache).
+
+        cache_len pads the emitted KV cache beyond the prompt so decode
+        steps have room (defaults to prompt length, the dry-run shape).
+        """
+        cfg = self.cfg
+        x, pos = self._embed_inputs(params, batch)
+
+        def body(x, lp):
+            y, (k, v), _ = self._layer(lp, x, pos)
+            return y, (k.astype(jnp.dtype(cfg.dtype)),
+                       v.astype(jnp.dtype(cfg.dtype)))
+
+        x, (ks, vs) = jax.lax.scan(_remat(body, "none"), x, params["layers"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:, :])
+        ks = pad_cache(ks, cache_len)
+        vs = pad_cache(vs, cache_len)
+        ks = shd.lsc(ks, "layers", "batch", "kv_seq", "cache_heads", "head_dim")
+        vs = shd.lsc(vs, "layers", "batch", "kv_seq", "cache_heads", "head_dim")
+        cache = {"k": ks, "v": vs,
+                 "pos": jnp.full((), x.shape[1] - 1, jnp.int32)}
+        return logits, cache
+
+    def _decode_attention(self, lp, x, pos, kc, vc):
+        """x: (B,1,d); kc/vc: (B,T,kv,D) (seq-sharded under a mesh)."""
+        cfg = self.cfg
+        q, k, v = L._project_qkv(dict(lp), x, cfg, pos[None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]          # (B,H,D)/(B,kv,D)
+        mesh = shd.current_mesh()
+        if mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
+            o, kc, vc = L.sharded_decode_attention(
+                q, kc, vc, k, v, pos, mesh)
+        else:
+            o, kc, vc = L.decode_attention_unsharded(q, kc, vc, k, v, pos)
+        mask = L.head_mask(cfg, o.dtype)
+        if mask is not None:
+            o = o * mask[None, :, None]
+        out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+        return out, kc, vc
+
+    def decode_step(self, params, cache, batch):
+        """One token for the whole batch. batch: {"tokens": (B,1)}.
+
+        The stacked cache rides the scan CARRY with per-layer
+        dynamic-slice/update — one live buffer (aliased via donation),
+        not the xs->ys double copy."""
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        x = shd.lsc(x, "batch", "seq", "embed")
+        pos = cache["pos"] + 1
+
+        def body(carry, lp):
+            x, ks, vs, i = carry
+            kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            h, kc, vc = self._decode_attention(lp["attn"], h, pos, kc, vc)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+            x = x + h
+            hn = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                h2, _ = moe_mod.moe_apply(lp["moe"], hn, cfg)
+            else:
+                h2 = L.mlp_apply(lp["mlp"], hn)
+            x = shd.lsc(x + h2, "batch", "seq", "embed")
+            return (x, ks, vs, i + 1), None
+
+        (x, ks, vs, _), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+            params["layers"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, {"k": ks, "v": vs, "pos": pos}
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape.kind == "train":
+            n_img = cfg.vlm.num_patches if cfg.family == "vlm" else 0
+            spec = {"tokens": tok((B, S - n_img)), "labels": tok((B, S - n_img))}
+            if n_img:
+                spec["images"] = jax.ShapeDtypeStruct(
+                    (B, n_img, cfg.d_model), jnp.dtype(cfg.dtype))
+            return spec
+        if shape.kind == "prefill":
+            n_img = cfg.vlm.num_patches if cfg.family == "vlm" else 0
+            spec = {"tokens": tok((B, S - n_img))}
+            if n_img:
+                spec["images"] = jax.ShapeDtypeStruct(
+                    (B, n_img, cfg.d_model), jnp.dtype(cfg.dtype))
+            return spec
+        return {"tokens": tok((B, 1))}
+
+    def input_logical(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        out = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        if self.cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+            out["images"] = ("batch", None, None)
+        return out
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        kv, D = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        s = jax.ShapeDtypeStruct((cfg.num_layers, B, T, kv, D), dt)
+        return {"k": s, "v": s, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_logical(self, shape: ShapeConfig):
+        kvspec = ("layers", "batch", "kv_seq", "cache_heads", "head_dim")
+        return {"k": kvspec, "v": kvspec, "pos": ()}
+
+    def init_cache(self, shape: ShapeConfig):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(shape))

@@ -1,0 +1,281 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, 1500, d_model). The decoder uses
+RoPE instead of the original 448-entry learned position table so the
+assignment's 32k decode shape is expressible (noted in DESIGN.md).
+Cross-attention KV is computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import params as pm
+from repro.models import transformer as tfm
+
+
+def _enc_layer_table(cfg):
+    return {
+        "ln1": L.norm_table(cfg.d_model),
+        "attn": L.attn_table(cfg),
+        "ln2": L.norm_table(cfg.d_model),
+        "mlp": L.mlp_table(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_table(cfg):
+    return {
+        "ln1": L.norm_table(cfg.d_model),
+        "self_attn": L.attn_table(cfg),
+        "ln_x": L.norm_table(cfg.d_model),
+        "cross_attn": L.attn_table(cfg),
+        "ln2": L.norm_table(cfg.d_model),
+        "mlp": L.mlp_table(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _sinusoid(S: int, d: int):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.vp = tfm.padded_vocab(cfg.vocab_size)
+        self._lm = tfm.DecoderLM(cfg)
+
+    def _top_table(self):
+        return {
+            "embed": L.embed_table(self.vp, self.cfg.d_model),
+            "enc_norm": L.norm_table(self.cfg.d_model),
+            "final_norm": L.norm_table(self.cfg.d_model),
+        }
+
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        params = pm.init_table(ks[0], self._top_table(), dt)
+        params["enc_layers"] = pm.init_stacked(
+            ks[1], _enc_layer_table(cfg), cfg.encdec.num_encoder_layers, dt)
+        params["dec_layers"] = pm.init_stacked(
+            ks[2], _dec_layer_table(cfg), cfg.num_layers, dt)
+        return params
+
+    def param_specs(self):
+        specs = pm.table_specs(self._top_table())
+        specs["enc_layers"] = pm.table_specs(_enc_layer_table(self.cfg),
+                                             prefix=("layers",))
+        specs["dec_layers"] = pm.table_specs(_dec_layer_table(self.cfg),
+                                             prefix=("layers",))
+        return specs
+
+    def param_shapes(self, dtype=None):
+        dt = dtype or jnp.dtype(self.cfg.param_dtype)
+        shapes = pm.eval_shape_tree(self._top_table(), dtype=dt)
+        shapes["enc_layers"] = pm.eval_shape_tree(
+            _enc_layer_table(self.cfg),
+            stack=self.cfg.encdec.num_encoder_layers, dtype=dt)
+        shapes["dec_layers"] = pm.eval_shape_tree(
+            _dec_layer_table(self.cfg), stack=self.cfg.num_layers, dtype=dt)
+        return shapes
+
+    def param_count(self):
+        cfg = self.cfg
+        return (pm.table_size(self._top_table())
+                + pm.table_size(_enc_layer_table(cfg)) * cfg.encdec.num_encoder_layers
+                + pm.table_size(_dec_layer_table(cfg)) * cfg.num_layers)
+
+    # --------------------------------------------------------------- enc
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+        x = shd.lsc(x, "batch", "seq", "embed")
+
+        def body(x, lp):
+            h, _ = self._attn(lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                              causal=False)
+            x = x + h
+            x = x + L.mlp_apply(lp["mlp"],
+                                L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return shd.lsc(x, "batch", "seq_sp", "embed"), None
+
+        x, _ = jax.lax.scan(tfm._remat(body, cfg.remat), x,
+                            params["enc_layers"])
+        return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _attn(self, ap, x, causal, kv_src=None, pos=None):
+        """Self or cross attention (kv_src = encoder output for cross)."""
+        cfg = self.cfg
+        wq = shd.lsc(ap["wq"], "attn_din_c", "heads", "head_dim")
+        wk = shd.lsc(ap["wk"], "attn_din_c", "kv_heads", "head_dim")
+        wv = shd.lsc(ap["wv"], "attn_din_c", "kv_heads", "head_dim")
+        wo = shd.lsc(ap["wo"], "heads", "head_dim", "attn_dout_c")
+        src = x if kv_src is None else kv_src
+        q = jnp.einsum("...d,dhk->...hk", x, wq)
+        k = jnp.einsum("...d,dhk->...hk", src, wk)
+        v = jnp.einsum("...d,dhk->...hk", src, wv)
+        if pos is not None:
+            q = L.rope(q, pos, cfg.rope_theta)
+            k = L.rope(k, pos, cfg.rope_theta)
+        mesh = shd.current_mesh()
+        if L.use_context_parallel(mesh, q.shape[1]):
+            o = L.context_parallel_attention(q, k, v, mesh, causal=causal)
+            o = shd.lsc(o, "batch", "seq_sp", "heads", "head_dim")
+        else:
+            o = L.flash_attention_jnp(
+                q, k, v, causal=causal,
+                q_block=min(512, q.shape[1]), kv_block=min(1024, k.shape[1]))
+        out = jnp.einsum("...hk,hkd->...d", o, wo)
+        return out, (k, v)
+
+    # --------------------------------------------------------------- dec
+    def _dec_layer(self, lp, x, enc, pos):
+        cfg = self.cfg
+        h, kv = self._attn(lp["self_attn"],
+                           L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                           causal=True, pos=pos)
+        x = x + h
+        h, cross_kv = self._attn(lp["cross_attn"],
+                                 L.rmsnorm(x, lp["ln_x"], cfg.norm_eps),
+                                 causal=False, kv_src=enc)
+        x = x + h
+        x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return shd.lsc(x, "batch", "seq_sp", "embed"), kv, cross_kv
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        # gather the seq-sharded encoder output ONCE before the decoder
+        # scan — otherwise every decoder layer re-gathers it (32x AG/CP)
+        enc = shd.lsc(enc, "batch", "seq", "embed")
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        x = shd.lsc(x, "batch", "seq", "embed")
+        pos = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            y, _, _ = self._dec_layer(lp, x, enc, pos)
+            return y, None
+
+        x, _ = jax.lax.scan(tfm._remat(body, cfg.remat), x,
+                            params["dec_layers"])
+        return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch)
+        logits = shd.lsc(L.unembed(x, params["embed"], tied=True),
+                         "batch", "seq", "vocab")
+        return tfm.cross_entropy(logits, batch["labels"],
+                                 self.cfg.vocab_size).mean()
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        enc = shd.lsc(enc, "batch", "seq", "embed")
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        S = x.shape[1]
+        pos = jnp.arange(S)
+
+        def body(x, lp):
+            y, (k, v), (ck, cv) = self._dec_layer(lp, x, enc, pos)
+            dt = jnp.dtype(cfg.dtype)
+            return y, (k.astype(dt), v.astype(dt), ck.astype(dt), cv.astype(dt))
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x[:, -1:], params["embed"], tied=True)
+        ks = tfm.pad_cache(ks, cache_len)
+        vs = tfm.pad_cache(vs, cache_len)
+        cache = {
+            "k": shd.lsc(ks, "layers", "batch", "kv_seq", "cache_heads", "head_dim"),
+            "v": shd.lsc(vs, "layers", "batch", "kv_seq", "cache_heads", "head_dim"),
+            "cross_k": cks, "cross_v": cvs,
+            "pos": jnp.full((), S - 1, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"])
+        pos = cache["pos"] + 1
+
+        def body(carry, lp_cross):
+            x, ks, vs, i = carry
+            lp, ck, cv = lp_cross
+            kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            h, kc, vc = self._lm._decode_attention(lp["self_attn"], h, pos,
+                                                   kc, vc)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+            x = x + h
+            # cross attention: static encoder kv (B, 1500, kv, D)
+            h = L.rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])[:, 0]
+            o, l, m = L.decode_attention_local(q, ck, cv, ck.shape[1])
+            o = L.combine_partials(o, l, m, None)
+            h = jnp.einsum("bhk,hkd->bd", o, lp["cross_attn"]["wo"])[:, None]
+            x = x + h
+            x = x + L.mlp_apply(lp["mlp"],
+                                L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return (x, ks, vs, i + 1), None
+
+        (x, ks, vs, _), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+            (params["dec_layers"], cache["cross_k"], cache["cross_v"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x, params["embed"], tied=True)
+        return logits, dict(cache, k=ks, v=vs, pos=pos)
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        E = cfg.encdec.encoder_seq
+        tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+        frames = jax.ShapeDtypeStruct((B, E, cfg.d_model), jnp.dtype(cfg.dtype))
+        if shape.kind == "train":
+            return {"frames": frames, "tokens": tok((B, S)),
+                    "labels": tok((B, S))}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": tok((B, S))}
+        return {"tokens": tok((B, 1))}
+
+    def input_logical(self, shape: ShapeConfig):
+        out = {"tokens": ("batch", None)}
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = ("batch", None, None)
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        return out
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        kv, D = cfg.num_kv_heads, cfg.resolved_head_dim
+        E = cfg.encdec.encoder_seq
+        dt = jnp.dtype(cfg.dtype)
+        s = jax.ShapeDtypeStruct((cfg.num_layers, B, T, kv, D), dt)
+        c = jax.ShapeDtypeStruct((cfg.num_layers, B, E, kv, D), dt)
+        return {"k": s, "v": s, "cross_k": c, "cross_v": c,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_logical(self, shape: ShapeConfig):
+        kvspec = ("layers", "batch", "kv_seq", "cache_heads", "head_dim")
+        cspec = ("layers", "batch", None, "kv_heads", "head_dim")
+        return {"k": kvspec, "v": kvspec, "cross_k": cspec,
+                "cross_v": cspec, "pos": ()}
+
+    def init_cache(self, shape: ShapeConfig):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(shape))

@@ -1,0 +1,95 @@
+"""Checkpointing: atomic save/restore + elastic resharding.
+
+Format: one .npz with flattened leaf arrays (key = joined pytree path)
+plus a msgpack sidecar (step, leaf order). Saves are atomic
+(tmp+rename); `latest` tracks the newest complete checkpoint, so a crash
+mid-save never corrupts restore state. `restore_resharded` device_puts
+leaves with the shardings of a *different* mesh — the elastic-scaling
+path (restore a 512-chip checkpoint onto 256 chips or vice versa).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        a = np.asarray(leaf)
+        if "bfloat16" in str(a.dtype) or a.dtype.kind == "V":
+            a = a.astype(np.float32)   # npz-safe; restore casts back
+        flat[key] = a
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, params, opt_state, step: int) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"ckpt_{step:08d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp.npz")
+    final = os.path.join(ckpt_dir, name + ".npz")
+    flat = {f"p/{k}": v for k, v in _flatten(params).items()}
+    flat.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(tmp, **flat)
+    os.rename(tmp, final)
+    meta = {"step": step, "file": name + ".npz"}
+    mtmp = os.path.join(ckpt_dir, "latest.tmp")
+    with open(mtmp, "wb") as f:
+        f.write(msgpack.packb(meta))
+    os.rename(mtmp, os.path.join(ckpt_dir, "latest"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "latest"), "rb") as f:
+            return msgpack.unpackb(f.read())["step"]
+    except FileNotFoundError:
+        return None
+
+
+def try_restore(ckpt_dir: str, params_tpl, opt_tpl
+                ) -> Optional[Tuple[Any, Any, int]]:
+    meta_path = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(meta_path):
+        return None
+    with open(meta_path, "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(ckpt_dir, meta["file"]))
+    flat = {k: data[k] for k in data.files}
+    params = _unflatten_into(
+        params_tpl, {k[2:]: v for k, v in flat.items() if k.startswith("p/")})
+    opt = _unflatten_into(
+        opt_tpl, {k[2:]: v for k, v in flat.items() if k.startswith("o/")})
+    return params, opt, int(meta["step"])
+
+
+def restore_resharded(ckpt_dir: str, params_tpl, opt_tpl, shardings=None):
+    """Elastic restore: place leaves with the (new) mesh's shardings."""
+    out = try_restore(ckpt_dir, params_tpl, opt_tpl)
+    if out is None:
+        return None
+    params, opt, step = out
+    if shardings is not None:
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            params, shardings)
+    return params, opt, step

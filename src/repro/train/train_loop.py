@@ -1,0 +1,140 @@
+"""Training step factory: microbatching (grad accumulation), remat-aware,
+mesh/rule-driven shardings, fault-tolerant outer loop.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+
+
+def make_train_step(model, opt_cfg: OptConfig, microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Microbatching splits the batch on dim 0 and accumulates
+    grads (the standard large-global-batch recipe)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grads_acc, grads)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zeros), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        params, opt_state = opt_mod.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": opt_mod.global_norm(grads)}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_sharded_train_step(model, opt_cfg: OptConfig, mesh, rules,
+                            shape, microbatches: int = 1):
+    """jit with explicit in/out shardings for the production mesh."""
+    step = make_train_step(model, opt_cfg, microbatches)
+    with shd.use_mesh(mesh, rules):
+        pspecs = shd.tree_shardings(model.param_specs())
+        ospecs = shd.tree_shardings(
+            opt_mod.state_specs(opt_cfg, model.param_specs()))
+        ispecs = {k: shd.make_sharding(v)
+                  for k, v in model.input_logical(shape).items()}
+    jitted = jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs, ispecs),
+        out_shardings=(pspecs, ospecs, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    max_failures: int = 3
+
+
+def run_train_loop(model, opt_cfg: OptConfig, data_iter, cfg: TrainLoopConfig,
+                   mesh=None, rules=None, params=None, opt_state=None,
+                   fault_hook: Optional[Callable[[int], None]] = None,
+                   log_fn=print):
+    """Fault-tolerant outer loop: periodic checkpoints; on a (simulated or
+    real) step failure, restore the last checkpoint and continue —
+    the CN-failure recovery path of §IV-A at training time."""
+    from repro.train import checkpoint as ckpt
+
+    if params is None:
+        params = model.init(0)
+    if opt_state is None:
+        opt_state = opt_mod.init_state(opt_cfg, params)
+
+    step_fn = make_train_step(model, opt_cfg)
+    if mesh is not None:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start = 0
+    if cfg.checkpoint_dir:
+        restored = ckpt.try_restore(cfg.checkpoint_dir, params, opt_state)
+        if restored is not None:
+            params, opt_state, start = restored
+            log_fn(f"[ckpt] resumed at step {start}")
+
+    failures = 0
+    history = []
+    it = iter(data_iter)
+    step = start
+    while step < cfg.steps:
+        batch = next(it)
+        batch = jax.tree.map(jnp.asarray, batch)
+        try:
+            if fault_hook is not None:
+                fault_hook(step)      # may raise to simulate a node loss
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        except RuntimeError as e:
+            failures += 1
+            if failures > cfg.max_failures or not cfg.checkpoint_dir:
+                raise
+            log_fn(f"[fault] step {step}: {e}; restoring checkpoint")
+            params, opt_state, step = ckpt.try_restore(
+                cfg.checkpoint_dir, params, opt_state)
+            continue
+        if step % cfg.log_every == 0:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            log_fn(f"step {step:5d} loss {loss:.4f}")
+        step += 1
+        if cfg.checkpoint_dir and step % cfg.checkpoint_every == 0:
+            ckpt.save(cfg.checkpoint_dir, params, opt_state, step)
+    if cfg.checkpoint_dir:
+        ckpt.save(cfg.checkpoint_dir, params, opt_state, step)
+    return params, opt_state, history

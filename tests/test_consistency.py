@@ -1,0 +1,51 @@
+"""Prefill vs chained-decode consistency: teacher-forced prefill logits
+must equal step-by-step decode logits (exact in fp32) for every arch —
+this pins the KV-cache/pos/state semantics across all five families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+
+
+def _fp32(cfg):
+    cfg = cfg.replace(dtype="float32", param_dtype="float32")
+    if cfg.moe is not None:
+        # capacity drops are batch-dependent; disable for equivalence
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
+def test_prefill_matches_chained_decode(arch):
+    cfg = _fp32(configs.get_reduced(arch))
+    model = registry.build(cfg)
+    params = model.init(0)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 48)), jnp.int32)
+
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.randn(2, cfg.encdec.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extra["images"] = jnp.asarray(
+            rng.randn(2, cfg.vlm.num_patches, cfg.d_model), jnp.float32)
+
+    def prefill(t):
+        return jax.jit(lambda p, b: model.prefill(p, b, cache_len=96))(
+            params, dict(tokens=t, **extra))
+
+    _, cache = prefill(toks[:, :46])
+    decode = jax.jit(model.decode_step)
+    l1, cache = decode(params, cache, {"tokens": toks[:, 46:47]})
+    l2, cache = decode(params, cache, {"tokens": toks[:, 47:48]})
+    want, _ = prefill(toks)
+    np.testing.assert_allclose(
+        np.asarray(l2, np.float32), np.asarray(want, np.float32),
+        atol=2e-4, rtol=2e-4)

@@ -1,0 +1,65 @@
+"""Data pipeline: query distribution, arrivals, hashing, batches."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.data import queries as q
+
+
+def test_query_sizes_heavy_tailed(rng):
+    d = q.QueryDist(mean_size=64.0, sigma=1.0)
+    s = d.sample(rng, 50_000)
+    assert s.min() >= 1 and s.max() <= d.max_size
+    assert np.percentile(s, 99) > 6 * np.median(s)   # Fig. 2a heavy tail
+
+
+def test_poisson_rate(rng):
+    arr = q.poisson_arrivals(1000.0, 10.0, rng)
+    assert len(arr) == pytest.approx(10_000, rel=0.1)
+    assert (np.diff(arr) >= 0).all()
+
+
+def test_hash_deterministic_and_in_range():
+    raw = np.arange(1000).reshape(10, 100)
+    h1 = q.hash_features(raw, 997)
+    h2 = q.hash_features(raw, 997)
+    np.testing.assert_array_equal(h1, h2)
+    assert (h1 >= 0).all() and (h1 < 997).all()
+    # different salt decorrelates
+    h3 = q.hash_features(raw, 997, salt=1)
+    assert (h1 != h3).mean() > 0.9
+
+
+def test_dlrm_batch_valid(rng):
+    cfg = configs.get_reduced("rm1")
+    b = q.dlrm_batch(cfg, 32, rng)
+    r = cfg.dlrm
+    assert b["dense"].shape == (32, r.num_dense_features)
+    assert b["indices"].shape == (32, r.num_tables, r.avg_pooling)
+    valid = b["indices"][b["indices"] >= 0]
+    assert (valid < r.rows_per_table).all()
+    assert ((b["indices"] >= 0).sum(axis=-1) >= 1).all()  # >=1 per bag
+    assert set(np.unique(b["labels"])) <= {0, 1}
+
+
+def test_sharded_loader_disjoint_streams():
+    cfg = configs.get_reduced("rm1")
+    gen = lambda rng: q.dlrm_batch(cfg, 4, rng)
+    it0 = iter(q.ShardedLoader(gen, host_id=0, num_hosts=2, seed=1))
+    it1 = iter(q.ShardedLoader(gen, host_id=1, num_hosts=2, seed=1))
+    b0, b1 = next(it0), next(it1)
+    assert not np.array_equal(b0["dense"], b1["dense"])
+    # determinism per host
+    it0b = iter(q.ShardedLoader(gen, host_id=0, num_hosts=2, seed=1))
+    np.testing.assert_array_equal(next(it0b)["dense"], b0["dense"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(mean=st.floats(2.0, 256.0), sigma=st.floats(0.1, 1.5),
+       seed=st.integers(0, 999))
+def test_query_dist_mean_tracks(mean, sigma, seed):
+    d = q.QueryDist(mean_size=mean, sigma=sigma, max_size=100_000)
+    s = d.sample(np.random.RandomState(seed), 20_000)
+    # ceil() biases the mean up by <1; heavy tails add sampling noise
+    assert mean * 0.75 <= s.mean() <= mean * 1.3 + 1.0

@@ -1,0 +1,86 @@
+"""C2: greedy embedding allocation + MemAccess routing (+ properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import embedding_manager as em
+
+
+def mk_tables(n, seed=0, dim=64):
+    rng = np.random.RandomState(seed)
+    return [em.TableInfo(i, int(rng.lognormal(12, 1.0)) + 1, dim,
+                         float(rng.lognormal(3, 0.8)) + 1)
+            for i in range(n)]
+
+
+def test_greedy_beats_random_balance():
+    tables = mk_tables(2000)
+    caps = [int(2.2 * sum(t.size_bytes for t in tables) / 8)] * 8
+    g = em.allocate_greedy(tables, caps)
+    r = em.allocate_random(tables, caps)
+    assert em.imbalance(g.mn_used) <= em.imbalance(r.mn_used)
+    rg = em.route_greedy(tables, g, 2, 8)
+    rr = em.route_random(tables, r, 2, 8)
+    assert em.imbalance(rg.mn_access) <= em.imbalance(rr.mn_access)
+    assert em.imbalance(rg.mn_access) < 1.2
+
+
+def test_replica_failure_rerouting():
+    tables = mk_tables(64)
+    caps = [int(2.5 * sum(t.size_bytes for t in tables) / 4)] * 4
+    alloc = em.allocate_greedy(tables, caps)
+    assert alloc.n_replicas >= 2
+    routing, reinit, _ = em.rebuild_after_failure(tables, alloc, 1, 4, [0])
+    assert not reinit                      # replicas survived
+    assert all(mn != 0 for mn in routing.routes.values())
+
+
+def test_total_replica_loss_triggers_reinit():
+    tables = mk_tables(16)
+    caps = [2 * sum(t.size_bytes for t in tables)] + [0, 0, 0]
+    alloc = em.allocate_greedy(tables, caps, n_replicas=1)
+    # all replicas on MN 0; kill it
+    routing, reinit, new_alloc = em.rebuild_after_failure(
+        tables, alloc, 1, 4, [0],
+        backup_capacity=2 * sum(t.size_bytes for t in tables))
+    assert reinit
+    assert all(mn != 0 for mn in routing.routes.values())
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_tables=st.integers(1, 60),
+    m=st.integers(1, 12),
+    cap_factor=st.floats(1.1, 5.0),
+    seed=st.integers(0, 10_000),
+)
+def test_allocation_properties(n_tables, m, cap_factor, seed):
+    """Invariants: every table gets exactly nReplicas distinct MNs; MN
+    usage never exceeds a small overflow of nominal capacity; routing
+    only targets replica holders."""
+    tables = mk_tables(n_tables, seed)
+    total = sum(t.size_bytes for t in tables)
+    caps = [int(cap_factor * total / m) + 1] * m
+    alloc = em.allocate_greedy(tables, caps)
+    assert 1 <= alloc.n_replicas <= m
+    for t in tables:
+        reps = alloc.replicas[t.tid]
+        assert len(reps) == alloc.n_replicas
+        assert len(set(reps)) == len(reps)
+    routing = em.route_greedy(tables, alloc, 3, m)
+    for (task, tid), mn in routing.routes.items():
+        assert mn in alloc.replicas[tid]
+    # conservation: routed access mass == n_tasks * sum(access)
+    assert np.isclose(sum(routing.mn_access),
+                      3 * sum(t.access_bytes for t in tables), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(2, 8))
+def test_greedy_routing_near_balanced(seed, m):
+    tables = mk_tables(200, seed)
+    caps = [int(2.5 * sum(t.size_bytes for t in tables) / m)] * m
+    alloc = em.allocate_greedy(tables, caps)
+    routing = em.route_greedy(tables, alloc, 1, m)
+    if alloc.n_replicas >= 2:
+        assert em.imbalance(routing.mn_access) < 1.6
