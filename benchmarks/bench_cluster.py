@@ -1,0 +1,62 @@
+"""ClusterEngine end-to-end: multi-unit routed serving (paper §IV/§V).
+
+Serves a reduced-RM1 query stream through the real-JAX ClusterEngine at
+{2 CN, 4 MN} with 2x replication, once clean and once with an MN killed
+mid-stream, and reports the routed-access imbalance plus the latency
+cross-check against the analytic serving-unit model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import configs
+from repro.data.queries import QueryDist, dlrm_batch
+from repro.models.dlrm import DLRMModel
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+
+from benchmarks.common import row, time_call
+
+
+def _requests(cfg, n, rng):
+    sizes = QueryDist(mean_size=8.0, max_size=64).sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(cfg, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.002 * i))
+    return reqs
+
+
+def run() -> dict:
+    cfg = configs.get_reduced("rm1")
+    model = DLRMModel(cfg)
+    params = model.init(0)
+    rng = np.random.RandomState(0)
+    reqs = _requests(cfg, 32, rng)
+    out = {}
+
+    cc = ClusterConfig(n_cn=2, m_mn=4, batch_size=32, n_replicas=2)
+    us = time_call(
+        lambda: ClusterEngine(model, params, cc).serve(reqs),
+        reps=1, warmup=1)
+    eng = ClusterEngine(model, params, cc)
+    _, st = eng.serve(reqs)
+    v = eng.validate_latency_model()
+    row("cluster_serve_32q_us", us,
+        f"p95_ms={st.p95 * 1e3:.3f},imbalance={st.imbalance:.3f},"
+        f"lat_model_ratio={v['ratio']:.2f}")
+    out["clean"] = st
+
+    us_f = time_call(
+        lambda: ClusterEngine(model, params, cc).serve(
+            reqs, failures=[(0.03, 1)]),
+        reps=1, warmup=1)
+    engf = ClusterEngine(model, params, cc)
+    _, stf = engf.serve(reqs, failures=[(0.03, 1)])
+    row("cluster_serve_mn_fail_us", us_f,
+        f"completed={stf.completed}/32,reroutes={stf.reroutes},"
+        f"reinits={stf.reinits}")
+    out["failure"] = stf
+    return out

@@ -23,6 +23,16 @@ def run() -> dict:
     row("kernel_embedding_bag_us", us, f"maxerr={err:.2e}")
     out["embedding_bag"] = (us, err)
 
+    # fused multi-table: one pallas_call for the whole table stack vs the
+    # vmapped per-table kernel above (one launch per table)
+    us_f = time_call(lambda: block(ops.embedding_bag_fused(tables, idx)))
+    err_f = float(jnp.max(jnp.abs(
+        ops.embedding_bag_fused(tables, idx)
+        - ref.embedding_bag_ref(tables, idx))))
+    row("kernel_embedding_bag_fused_us", us_f,
+        f"maxerr={err_f:.2e},vs_vmapped={us / max(us_f, 1e-9):.2f}x")
+    out["embedding_bag_fused"] = (us_f, err_f)
+
     q = jnp.asarray(rng.randn(1, 4, 256, 32), jnp.float32)
     k = jnp.asarray(rng.randn(1, 2, 256, 32), jnp.float32)
     v = jnp.asarray(rng.randn(1, 2, 256, 32), jnp.float32)

@@ -151,10 +151,17 @@ def rebuild_after_failure(tables: Sequence[TableInfo], alloc: Allocation,
     if not lost:
         routing = route_greedy(tables, alloc, n_tasks, m, exclude=failed)
         return routing, False, alloc
-    # re-initialize with backups replacing dead MNs
-    caps = [0 if i in dead else backup_capacity or max(alloc.mn_used)
+    # re-initialize with backups replacing dead MNs; survivors must absorb
+    # the full replica set, so size their capacity for it (the old per-MN
+    # usage is too small once the pool shrinks)
+    live = max(1, m - len(dead))
+    total = sum(t.size_bytes for t in tables)
+    need = (alloc.n_replicas * total) // live + max(
+        (t.size_bytes for t in tables), default=0)
+    caps = [0 if i in dead else max(backup_capacity, need)
             for i in range(m)]
-    new_alloc = allocate_greedy(tables, caps, n_replicas=alloc.n_replicas)
+    new_alloc = allocate_greedy(tables, caps,
+                                n_replicas=min(alloc.n_replicas, live))
     routing = route_greedy(tables, new_alloc, n_tasks, m, exclude=failed)
     return routing, True, new_alloc
 

@@ -36,6 +36,10 @@ class Batch:
     queries: List[Query]
     formed_at: float
     size: int
+    # (query, rows contributed) in row order — lets an engine slice each
+    # query's payload rows out of the fused batch (split queries appear in
+    # several batches; their contributions are consumed FIFO)
+    parts: List[Tuple[Query, int]] = field(default_factory=list)
 
 
 class Batcher:
@@ -60,9 +64,11 @@ class Batcher:
         return out
 
     def flush(self, now: float) -> List[Batch]:
-        """Emit a partial batch if max_wait elapsed."""
-        if (self._pending and self._pending_since is not None
-                and now - self._pending_since >= self.max_wait):
+        """Emit a partial batch if max_wait elapsed. Compares against
+        next_deadline() so `flush(next_deadline())` always fires (the
+        subtraction form can miss by one ulp)."""
+        deadline = self.next_deadline()
+        if deadline is not None and now >= deadline:
             return [self._form(now)]
         return []
 
@@ -77,6 +83,7 @@ class Batcher:
     def _form(self, now: float) -> Batch:
         take = self.batch_size
         members: List[Query] = []
+        parts: List[Tuple[Query, int]] = []
         kept: List[Tuple[Query, int]] = []
         used = 0
         for q, rem in self._pending:
@@ -87,10 +94,11 @@ class Batcher:
             take -= grab
             used += grab
             members.append(q)
+            parts.append((q, grab))
             if rem - grab > 0:
                 kept.append((q, rem - grab))
         self._pending = kept
         self._pending_since = None if not kept else self._pending_since
-        b = Batch(self._next_bid, members, now, used)
+        b = Batch(self._next_bid, members, now, used, parts)
         self._next_bid += 1
         return b

@@ -68,3 +68,70 @@ def embedding_bag(tables: jax.Array, idx: jax.Array,
     out = jax.vmap(f, in_axes=(0, 1), out_axes=1)(tables,
                                                   idx)  # (B, T, D)
     return out.astype(tables.dtype)
+
+
+# --------------------------------------------------------- fused multi-table
+def _fused_kernel(idx_ref, off_ref, table_blk, out_blk):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        out_blk[...] = jnp.zeros_like(out_blk)
+
+    @pl.when(idx_ref[b, t, p] >= 0)
+    def _acc():
+        out_blk[...] += table_blk[...].astype(out_blk.dtype)
+
+
+def embedding_bag_fused_flat(flat_table: jax.Array, offsets: jax.Array,
+                             idx: jax.Array,
+                             interpret: bool = True) -> jax.Array:
+    """One Pallas call pooling every table of a (flattened) shard.
+
+    flat_table: (sum_t R_t, D) — all tables stacked row-wise, so tables of
+    different row counts coexist in one shard buffer.
+    offsets:    (T,) int32 — scalar-prefetched row offset of each table in
+    flat_table; with idx, it drives the BlockSpec index_map so the pipeline
+    streams exactly one (1, D) row per (bag, table, slot) grid step.
+    idx:        (B, T, P) int32, table-local rows, -1 padded.
+
+    Returns pooled (B, T, D) fp32. Grid order (B, T, P) makes P innermost:
+    each (b, t) output block is revisited P times and accumulated in VMEM —
+    raw rows never return to HBM, only the pooled Fsum (the NMP insight,
+    now amortizing ONE kernel launch across the whole shard instead of one
+    vmapped call per table).
+    """
+    _, D = flat_table.shape
+    B, T, P = idx.shape
+
+    def table_map(b, t, p, idx_ref, off_ref):
+        # clamp padding to the table's row 0; accumulate is masked off
+        return off_ref[t] + jnp.maximum(idx_ref[b, t, p], 0), 0
+
+    def out_map(b, t, p, idx_ref, off_ref):
+        return b, t, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T, P),
+        in_specs=[pl.BlockSpec((1, D), table_map)],
+        out_specs=pl.BlockSpec((1, 1, D), out_map),
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        interpret=interpret,
+    )(idx, offsets, flat_table)
+
+
+def embedding_bag_fused(tables: jax.Array, idx: jax.Array,
+                        interpret: bool = True) -> jax.Array:
+    """tables: (T, R, D); idx: (B, T, P) -> pooled (B, T, D) in one call."""
+    T, R, D = tables.shape
+    offsets = jnp.arange(T, dtype=jnp.int32) * R
+    out = embedding_bag_fused_flat(tables.reshape(T * R, D), offsets, idx,
+                                   interpret=interpret)
+    return out.astype(tables.dtype)

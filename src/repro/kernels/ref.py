@@ -11,6 +11,21 @@ def embedding_bag_ref(tables, idx):
     return _ref(tables, idx)
 
 
+def embedding_bag_seq_ref(tables, idx):
+    """Order-exact oracle: accumulates pooling slots in ascending order,
+    the same order the Pallas kernels revisit the output block — so fp32
+    results match the kernels bitwise (jnp.sum may reassociate)."""
+    valid = (idx >= 0)[..., None]                    # (B, T, P, 1)
+    safe = jnp.maximum(idx, 0)
+    rows = jax.vmap(lambda tb, ix: jnp.take(tb, ix, axis=0),
+                    in_axes=(0, 1), out_axes=1)(tables, safe)  # (B,T,P,D)
+    rows = jnp.where(valid, rows.astype(jnp.float32), 0.0)
+    acc = jnp.zeros(rows.shape[:2] + rows.shape[3:], jnp.float32)
+    for p in range(idx.shape[-1]):
+        acc = acc + rows[:, :, p]
+    return acc
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """q: (B,H,S,D); k/v: (B,Hkv,T,D) -> (B,H,S,D) full softmax."""
     B, H, S, D = q.shape

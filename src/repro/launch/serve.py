@@ -1,6 +1,8 @@
 """Serving driver: disaggregated DLRM scoring or LM generation.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
+      --cns 2 --mns 4 --fail-mn 1
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
 """
 from __future__ import annotations
@@ -14,6 +16,7 @@ import numpy as np
 from repro import configs
 from repro.data.queries import QueryDist, dlrm_batch
 from repro.models import registry
+from repro.serving.cluster import ClusterConfig, ClusterEngine
 from repro.serving.engine import DLRMServingEngine, LMServingEngine, Request
 
 
@@ -26,6 +29,15 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=64)
     p.add_argument("--decode-steps", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cluster", action="store_true",
+                   help="serve across {n CN, m MN} via ClusterEngine")
+    p.add_argument("--cns", type=int, default=2)
+    p.add_argument("--mns", type=int, default=4)
+    p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--fail-mn", type=int, default=None,
+                   help="kill this MN mid-stream (cluster mode)")
+    p.add_argument("--no-kernel", dest="use_kernel", action="store_false",
+                   default=True)
     args = p.parse_args(argv)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -35,7 +47,6 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
 
     if cfg.family == "dlrm":
-        engine = DLRMServingEngine(model, params, batch_size=args.batch)
         qd = QueryDist(mean_size=8.0, max_size=4 * args.batch)
         sizes = qd.sample(rng, args.requests)
         reqs = []
@@ -43,12 +54,36 @@ def main(argv=None):
             b = dlrm_batch(cfg, int(s), rng)
             reqs.append(Request(i, {"dense": b["dense"],
                                     "indices": b["indices"]},
-                                int(s), float(i)))
-        results = engine.serve(reqs)
-        scores = np.concatenate([r.outputs for r in results])
-        print(f"[serve] scored {len(results)} queries "
-              f"({scores.size} samples), mean CTR {scores.mean():.4f}")
+                                int(s), 0.001 * i))
+        if args.cluster:
+            engine = ClusterEngine(model, params, ClusterConfig(
+                n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
+                n_replicas=args.replicas, use_kernel=args.use_kernel))
+            failures = ([] if args.fail_mn is None
+                        else [(0.001 * args.requests / 2, args.fail_mn)])
+            results, stats = engine.serve(reqs, failures=failures)
+            scores = np.concatenate([r.outputs for r in results])
+            print(f"[serve] cluster {{{args.cns} CN, {args.mns} MN}} "
+                  f"scored {stats.completed} queries "
+                  f"({scores.size} samples), mean CTR {scores.mean():.4f}")
+            print(f"[serve] p50 {stats.p50 * 1e3:.3f}ms "
+                  f"p95 {stats.p95 * 1e3:.3f}ms  "
+                  f"MN imbalance {stats.imbalance:.3f}  "
+                  f"failures={stats.failures} reroutes={stats.reroutes}")
+            v = engine.validate_latency_model()
+            print(f"[serve] latency model cross-check: engine/analytic "
+                  f"= {v['ratio']:.2f}")
+        else:
+            engine = DLRMServingEngine(model, params, batch_size=args.batch,
+                                       use_kernel=args.use_kernel)
+            results = engine.serve(reqs)
+            scores = np.concatenate([r.outputs for r in results])
+            print(f"[serve] scored {len(results)} queries "
+                  f"({scores.size} samples), mean CTR {scores.mean():.4f}")
     else:
+        if args.cluster:
+            print("[serve] --cluster only applies to dlrm archs; "
+                  "running single-unit LM generation")
         engine = LMServingEngine(model, params, cache_len=128)
         toks = rng.randint(0, cfg.vocab_size, (2, 16)).astype(np.int32)
         extra = {}

@@ -93,19 +93,38 @@ class DLRMModel:
         return pm.table_size(self._tables())
 
     # ------------------------------------------------------------ forward
-    def forward(self, params, batch):
+    def pool_embeddings(self, params, idx, use_kernel: bool = False):
+        """SparseNet G_S: gather+pool all tables -> (B, T, D).
+
+        `use_kernel=True` runs the fused multi-table Pallas embedding-bag
+        (one call for the whole table stack); otherwise the jnp reference.
+        This is the shard-local half of the query path — the ClusterEngine
+        calls it per MN shard with that shard's table subset.
+        """
+        if use_kernel:
+            from repro.kernels import ops
+            return ops.embedding_bag_fused(params["embed"], idx)
+        return embedding_bag_ref(params["embed"], idx)
+
+    def dense_forward(self, params, dense, pooled):
+        """DenseNet G_D on already-pooled embeddings (the CN-side half:
+        what runs after the Fsum gather returns from the MN pool)."""
         r = self.cfg.dlrm
-        dense, idx = batch["dense"], batch["indices"]
         bot = _mlp_apply(params["bottom"], dense, len(r.bottom_mlp))
-        pooled = embedding_bag_ref(params["embed"], idx)        # (B,T,D)
         pooled = shd.lsc(pooled, "batch", None, None)           # Fsum gather
-        pooled = jnp.einsum("btd,tk->bkd", pooled, params["proj"])
+        pooled = jnp.einsum("btd,tk->bkd", pooled.astype(bot.dtype),
+                            params["proj"])
         z = jnp.concatenate([bot[:, None, :], pooled], axis=1)  # (B,K+1,D)
         zz = jnp.einsum("bfd,bgd->bfg", z, z)
         iu = jnp.triu_indices(self.num_feats, k=1)
         inter = zz[:, iu[0], iu[1]]                             # (B, F(F-1)/2)
         x = jnp.concatenate([bot, inter], axis=-1)
         return _mlp_apply(params["top"], x, len(r.top_mlp))[..., 0]
+
+    def forward(self, params, batch, use_kernel: bool = False):
+        pooled = self.pool_embeddings(params, batch["indices"],
+                                      use_kernel=use_kernel)
+        return self.dense_forward(params, batch["dense"], pooled)
 
     def loss(self, params, batch):
         logit = self.forward(params, batch)
@@ -114,8 +133,9 @@ class DLRMModel:
         # stable BCE-with-logits
         return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
 
-    def serve_step(self, params, batch):
-        return jax.nn.sigmoid(self.forward(params, batch))
+    def serve_step(self, params, batch, use_kernel: bool = False):
+        return jax.nn.sigmoid(self.forward(params, batch,
+                                           use_kernel=use_kernel))
 
     # -------------------------------------------------------------- specs
     def input_specs(self, shape_or_batch):

@@ -1,0 +1,11 @@
+"""Serving layer: analytic model consumers at three fidelities.
+
+simulator.ClusterSim  — discrete-event simulator (queueing, policies)
+engine.*ServingEngine — real-JAX single-unit engines
+cluster.ClusterEngine — real-JAX multi-unit engine with replica routing
+"""
+from repro.serving.cluster import (ClusterConfig, ClusterEngine,  # noqa: F401
+                                   ClusterStats)
+from repro.serving.engine import (DLRMServingEngine,  # noqa: F401
+                                  LMServingEngine, Request, Result)
+from repro.serving.simulator import ClusterSim, SimConfig  # noqa: F401

@@ -1,0 +1,366 @@
+"""Cluster-scale disaggregated serving engine (paper §IV, Fig. 6/7/9).
+
+This is the real-JAX layer of the three-layer validation story:
+
+  analytic ``core.serving_unit.ServingUnitModel``   (closed-form stages)
+      <->  DES ``serving.simulator.ClusterSim``      (queueing behavior)
+      <->  ``ClusterEngine``                         (this module)
+
+One engine serves a cluster of {n CNs, m MNs}: queries enter a shared
+ingress ``Batcher`` (large queries split, small queries fused — Fig. 3a),
+each batch lands on the least-loaded CN, and that CN's task id selects the
+rows of the MemAccess routing table (``core.embedding_manager``) that
+scatter its table lookups over the MN pool.  Every MN holds a replica
+shard — the stacked tables the greedy allocator placed on it — and pools
+its routed tables with ONE fused multi-table Pallas call
+(``kernels.embedding_bag.embedding_bag_fused_flat``: the shard's tables
+flattened row-wise, per-table row offsets scalar-prefetched).  Only pooled
+(B, T_j, D) Fsum vectors return to the CN (the near-memory-reduction
+contract), which gathers them and runs DenseNet + sigmoid.
+
+Failures (§IV-A/§IV-D): ``fail_mn`` marks an MN dead and rebuilds routing
+over the surviving replicas (fast path) or re-initializes the allocation
+when a table lost every replica.  ``serve`` accepts timed failure events;
+a failure landing inside a batch's MN stage re-issues that batch's lookups
+on the survivors — no query is ever dropped.
+
+Latency accounting is wall-clock-free: a virtual clock driven by the
+analytic unit model's stage times (G_P, scatter, G_S from *measured*
+per-MN access bytes, gather, G_D), so per-query latencies can be
+cross-validated against ``ServingUnitModel.stage_times`` and the DES
+(``validate_latency_model``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding_manager as em
+from repro.core import failure as fail_mod
+from repro.core.scheduler import Batch, Batcher, Query
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+from repro.serving.engine import Request, Result
+
+
+@dataclass
+class ClusterConfig:
+    n_cn: int = 2                 # serving-unit compute nodes (= tasks)
+    m_mn: int = 4                 # memory-node pool
+    batch_size: int = 64
+    max_wait_s: float = 0.002     # ingress batcher flush deadline
+    n_replicas: int = 2           # embedding replication factor
+    use_kernel: bool = True       # fused Pallas bag on the MN hot path
+    cn_type: str = "cn_1g"
+    mn_type: str = "ddr_mn"
+    mn_recovery_s: float = fail_mod.recovery_cost_s("mn")
+
+
+@dataclass
+class ClusterStats:
+    completed: int
+    mean_latency: float
+    p50: float
+    p95: float
+    failures: int
+    reroutes: int
+    reinits: int
+    mn_access_bytes: List[float]
+    imbalance: float              # max/mean access over surviving MNs
+
+
+class ClusterEngine:
+    """Serve a DLRM over {n CN, m MN} with replica-aware routing."""
+
+    def __init__(self, model, params, cfg: Optional[ClusterConfig] = None,
+                 unit_model: Optional[ServingUnitModel] = None):
+        assert model.cfg.family == "dlrm"
+        self.model = model
+        self.params = params
+        self.cfg = cfg or ClusterConfig()
+        r = model.cfg.dlrm
+        self.T, self.R, self.D = (r.num_tables, r.rows_per_table,
+                                  r.embed_dim)
+        self.tables = [em.TableInfo(t, self.R, self.D, float(r.avg_pooling))
+                       for t in range(self.T)]
+        # MN capacity sized so the requested replication factor fits, with
+        # one table of slack per MN for greedy placement skew
+        total = sum(t.size_bytes for t in self.tables)
+        cap = (math.ceil(self.cfg.n_replicas * total / self.cfg.m_mn)
+               + self.tables[0].size_bytes)
+        self.capacities = [cap] * self.cfg.m_mn
+        self.alloc = em.allocate_greedy(self.tables, self.capacities,
+                                        n_replicas=self.cfg.n_replicas)
+        self.dead: Set[int] = set()
+        self.routing = em.route_greedy(self.tables, self.alloc,
+                                       self.cfg.n_cn, self.cfg.m_mn)
+        self._build_shards()
+        self.unit_model = unit_model or ServingUnitModel(
+            model.cfg, UnitSpec(self.cfg.n_cn, self.cfg.cn_type,
+                                self.cfg.m_mn, self.cfg.mn_type))
+        self._dense_step = jax.jit(
+            lambda p, d, pooled: jax.nn.sigmoid(
+                model.dense_forward(p, d, pooled)))
+        # counters / accounting
+        self.failures = 0
+        self.reroutes = 0
+        self.reinits = 0
+        self.mn_access_bytes = np.zeros(self.cfg.m_mn)
+
+    # ------------------------------------------------------------- shards
+    def _build_shards(self) -> None:
+        """Materialize each MN's replica shard: the tables the allocator
+        placed on it, flattened row-wise for the fused kernel."""
+        embed = self.params["embed"]                      # (T, R, D)
+        self._shard_tids: List[List[int]] = []
+        self._shard_slot: List[Dict[int, int]] = []
+        self._shard_flat: List[jax.Array] = []
+        for j in range(self.cfg.m_mn):
+            tids = sorted(t for t, reps in self.alloc.replicas.items()
+                          if j in reps)
+            self._shard_tids.append(tids)
+            self._shard_slot.append({t: s for s, t in enumerate(tids)})
+            if tids:
+                flat = jnp.reshape(embed[jnp.asarray(tids)],
+                                   (len(tids) * self.R, self.D))
+            else:
+                flat = jnp.zeros((0, self.D), embed.dtype)
+            self._shard_flat.append(flat)
+
+    # ------------------------------------------------------------ failure
+    def fail_mn(self, j: int) -> None:
+        """Kill MN `j`: re-route to surviving replicas, or re-initialize
+        the shard allocation if some table lost its last replica."""
+        if not 0 <= j < self.cfg.m_mn:
+            raise ValueError(f"MN id {j} outside pool of {self.cfg.m_mn}")
+        if j in self.dead:
+            return
+        self.dead.add(j)
+        self.failures += 1
+        lost = any(all(r in self.dead for r in self.alloc.replicas[t.tid])
+                   for t in self.tables)
+        if lost:
+            # §IV-A re-initialization: some table lost its last replica, so
+            # standby backup MNs take over the failed slots and replicas
+            # are restored from the parameter store — the pool returns to
+            # full strength under a fresh allocation
+            self.reinits += 1
+            self.dead.clear()
+            self.alloc = em.allocate_greedy(self.tables, self.capacities,
+                                            n_replicas=self.cfg.n_replicas)
+            self.routing = em.route_greedy(self.tables, self.alloc,
+                                           self.cfg.n_cn, self.cfg.m_mn)
+            self._build_shards()
+        else:
+            self.reroutes += 1
+            self.routing = em.route_greedy(self.tables, self.alloc,
+                                           self.cfg.n_cn, self.cfg.m_mn,
+                                           exclude=sorted(self.dead))
+
+    def recover_mn(self, j: int) -> None:
+        if j not in self.dead:
+            return
+        self.dead.discard(j)
+        self.routing = em.route_greedy(self.tables, self.alloc,
+                                       self.cfg.n_cn, self.cfg.m_mn,
+                                       exclude=sorted(self.dead))
+
+    # ------------------------------------------------------ real compute
+    def _mn_pool(self, j: int, tids: Sequence[int],
+                 idx_sub: np.ndarray) -> jax.Array:
+        """Pool MN j's routed tables: one fused kernel call per shard."""
+        slots = np.asarray([self._shard_slot[j][t] for t in tids], np.int32)
+        if self.cfg.use_kernel:
+            from repro.kernels import ops
+            offsets = jnp.asarray(slots * self.R)
+            return ops.embedding_bag_fused_flat(
+                self._shard_flat[j], offsets, jnp.asarray(idx_sub))
+        from repro.models.dlrm import embedding_bag_ref
+        stack = self._shard_flat[j].reshape(-1, self.R, self.D)[
+            jnp.asarray(slots)]
+        return embedding_bag_ref(stack, jnp.asarray(idx_sub))
+
+    def _execute(self, task: int, dense: np.ndarray, idx: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Scatter -> per-MN fused pooling -> gather -> DenseNet.
+
+        Returns (scores, per-MN access bytes actually touched)."""
+        shards = em.shard_assignment(self.alloc, self.routing, self.T,
+                                     self.cfg.m_mn, task)
+        B = dense.shape[0]
+        pooled = np.zeros((B, self.T, self.D), np.float32)
+        bytes_j = np.zeros(self.cfg.m_mn)
+        for j, tids in enumerate(shards):
+            if not tids:
+                continue
+            if j in self.dead:          # stale routing — never expected
+                raise LookupError(f"routing targets dead MN {j}")
+            sub = idx[:, tids, :]
+            pooled[:, tids, :] = np.asarray(self._mn_pool(j, tids, sub))
+            bytes_j[j] = float((sub >= 0).sum()) * self.D * 4
+        scores = np.asarray(self._dense_step(self.params,
+                                             jnp.asarray(dense),
+                                             jnp.asarray(pooled)))
+        return scores, bytes_j
+
+    # ---------------------------------------------------------- serving
+    def serve(self, requests: List[Request],
+              failures: Sequence[Tuple[float, int]] = ()
+              ) -> Tuple[List[Result], ClusterStats]:
+        """Serve a request stream; `failures` is [(time_s, mn_id), ...].
+
+        Execution is real JAX; time is a virtual clock advanced with the
+        analytic stage model, so latencies are deterministic and
+        comparable to ServingUnitModel / ClusterSim."""
+        cfg = self.cfg
+        batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
+        fail_q = sorted(failures)
+        payload = {r.rid: r.payload for r in requests}
+        arrival = {r.rid: r.arrival for r in requests}
+        row_cursor: Dict[int, int] = {r.rid: 0 for r in requests}
+        pieces: Dict[int, List[np.ndarray]] = {r.rid: [] for r in requests}
+        rows_left = {r.rid: r.size for r in requests}
+        results: List[Result] = []
+        latencies: List[float] = []
+
+        st = self.unit_model.stage_times(cfg.batch_size)
+        mn_bw = self.unit_model.unit.mn.mem_bw
+        cn_pre_free = np.zeros(cfg.n_cn)
+        cn_gpu_free = np.zeros(cfg.n_cn)
+        mn_barrier = 0.0              # sequential lock-step over the pool
+
+        def inject(upto: float) -> None:
+            while fail_q and fail_q[0][0] <= upto:
+                _, j = fail_q.pop(0)
+                self.fail_mn(j)
+
+        def run_batch(b: Batch, now: float) -> None:
+            nonlocal mn_barrier
+            # assemble real rows from each member query's payload
+            dense_rows, idx_rows = [], []
+            for q, nrows in b.parts:
+                c = row_cursor[q.qid]
+                dense_rows.append(payload[q.qid]["dense"][c:c + nrows])
+                idx_rows.append(payload[q.qid]["indices"][c:c + nrows])
+                row_cursor[q.qid] = c + nrows
+            dense = np.concatenate(dense_rows)
+            idx = np.concatenate(idx_rows)
+            pad = cfg.batch_size - dense.shape[0]
+            if pad > 0:
+                dense = np.concatenate(
+                    [dense, np.zeros_like(dense[:1]).repeat(pad, 0)])
+                idx = np.concatenate(
+                    [idx, -np.ones_like(idx[:1]).repeat(pad, 0)])
+
+            scale = b.size / cfg.batch_size
+            task = int(np.argmin(cn_pre_free))
+            pre_done = max(now, cn_pre_free[task]) + st.t_pre * scale
+            cn_pre_free[task] = pre_done
+            mn_start = max(pre_done + st.t_comm_in * scale, mn_barrier)
+
+            # MNs that died during G_P/scatter are gone before this batch's
+            # MN stage begins: re-route first, then execute
+            inject(mn_start)
+            scores, bytes_j = self._execute(task, dense, idx)
+            t_mn = float(bytes_j.max()) / mn_bw       # slowest MN gates
+
+            # a failure landing inside this batch's MN stage hits packets
+            # in flight: rebuild routing, re-issue on the survivors
+            while (fail_q and mn_start < fail_q[0][0] <= mn_start + t_mn):
+                t_fail, j = fail_q.pop(0)
+                hit = bytes_j[j] > 0
+                self.fail_mn(j)
+                if hit:
+                    scores, bytes_j = self._execute(task, dense, idx)
+                    t_mn = float(bytes_j.max()) / mn_bw
+                    mn_start = t_fail + cfg.mn_recovery_s
+            mn_done = mn_start + t_mn
+            mn_barrier = mn_done
+            self.mn_access_bytes += bytes_j
+
+            g_start = max(mn_done + st.t_comm_out * scale,
+                          cn_gpu_free[task])
+            done = g_start + st.t_dense * scale
+            cn_gpu_free[task] = done
+
+            o = 0
+            for q, nrows in b.parts:
+                pieces[q.qid].append(scores[o:o + nrows])
+                o += nrows
+                rows_left[q.qid] -= nrows
+                if rows_left[q.qid] == 0:
+                    lat = done - arrival[q.qid]
+                    latencies.append(lat)
+                    results.append(Result(
+                        q.qid, np.concatenate(pieces[q.qid]), lat))
+
+        def drain_due(upto: Optional[float]) -> None:
+            """Form every batch whose flush deadline has passed."""
+            while True:
+                dl = batcher.next_deadline()
+                if dl is None or (upto is not None and dl > upto):
+                    return
+                inject(dl)
+                out = batcher.flush(dl)
+                if not out:
+                    return
+                for b in out:
+                    run_batch(b, dl)
+
+        for req in sorted(requests, key=lambda r: r.arrival):
+            drain_due(req.arrival)
+            inject(req.arrival)
+            q = Query(req.rid, req.arrival, req.size)
+            for b in batcher.offer(q, req.arrival):
+                run_batch(b, req.arrival)
+        drain_due(None)
+
+        lats = np.asarray(latencies) if latencies else np.zeros(1)
+        live = [a for j, a in enumerate(self.mn_access_bytes)
+                if j not in self.dead]
+        stats = ClusterStats(
+            completed=len(results),
+            mean_latency=float(lats.mean()),
+            p50=float(np.percentile(lats, 50)),
+            p95=float(np.percentile(lats, 95)),
+            failures=self.failures,
+            reroutes=self.reroutes,
+            reinits=self.reinits,
+            mn_access_bytes=list(self.mn_access_bytes),
+            imbalance=em.imbalance(live),
+        )
+        results.sort(key=lambda r: r.rid)
+        return results, stats
+
+    # ------------------------------------------------------- validation
+    def validate_latency_model(self) -> Dict[str, float]:
+        """Unloaded single-batch latency: engine clock vs analytic model.
+
+        The engine's virtual clock uses the analytic stage times for
+        G_P/comm/G_D but *measured* access bytes for G_S, so the ratio
+        engine/analytic isolates how far observed pooling + routing
+        imbalance sit from the model's uniform assumption (~1 when the
+        workload matches cfg.avg_pooling)."""
+        st = self.unit_model.stage_times(self.cfg.batch_size)
+        analytic = st.total()
+        sparse_measured = 0.0
+        if self.mn_access_bytes.max() > 0:
+            per_batch = self.mn_access_bytes.max() / max(
+                1, self._batches_seen())
+            sparse_measured = per_batch / self.unit_model.unit.mn.mem_bw
+        engine = (st.t_pre + st.t_comm_in + sparse_measured
+                  + st.t_comm_out + st.t_dense)
+        return {"analytic_s": analytic, "engine_s": engine,
+                "ratio": engine / analytic if analytic else 1.0}
+
+    def _batches_seen(self) -> int:
+        total_bytes = self.mn_access_bytes.sum()
+        if total_bytes == 0:
+            return 0
+        per_batch = (self.cfg.batch_size * self.T
+                     * self.model.cfg.dlrm.avg_pooling * self.D * 4)
+        return max(1, int(round(total_bytes / per_batch)))

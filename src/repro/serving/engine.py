@@ -42,7 +42,9 @@ class DLRMServingEngine:
         self.batch_size = batch_size
         self.mesh = mesh
         self.rules = rules
-        self._step = jax.jit(model.serve_step)
+        self.use_kernel = use_kernel
+        self._step = jax.jit(
+            lambda p, b: model.serve_step(p, b, use_kernel=use_kernel))
         self._clock = 0.0
 
     def _pad_concat(self, reqs: List[Request]) -> Dict[str, np.ndarray]:

@@ -1,0 +1,166 @@
+"""ClusterEngine: multi-unit routed serving + MN failure survival.
+
+Ground truth for outputs is the model's own serve_step on each query's
+full payload — the cluster's scatter/fused-pool/gather path must score
+every query identically regardless of batching, routing, or failures.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import rm1
+from repro.core.scheduler import Batcher, Query
+from repro.data.queries import QueryDist, dlrm_batch
+from repro.models.dlrm import DLRMModel
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-test",
+    dlrm=rm1.DLRMConfig(num_tables=6, rows_per_table=64, embed_dim=8,
+                        avg_pooling=5, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = DLRMModel(CFG)
+    return model, model.init(0)
+
+
+def make_requests(n, seed=0, mean_size=5.0, max_size=24):
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=mean_size, max_size=max_size).sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.005 * i))
+    return reqs
+
+
+def direct_scores(model, params, reqs):
+    out = {}
+    for r in reqs:
+        batch = {"dense": jnp.asarray(r.payload["dense"]),
+                 "indices": jnp.asarray(r.payload["indices"])}
+        out[r.rid] = np.asarray(model.serve_step(params, batch))
+    return out
+
+
+def test_cluster_end_to_end(model_and_params):
+    model, params = model_and_params
+    reqs = make_requests(20)
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=16, n_replicas=2))
+    results, stats = eng.serve(reqs)
+    assert stats.completed == len(reqs)
+    assert sorted(r.rid for r in results) == list(range(len(reqs)))
+    want = direct_scores(model, params, reqs)
+    for r in results:
+        assert r.outputs.shape == (reqs[r.rid].size,)
+        np.testing.assert_allclose(r.outputs, want[r.rid],
+                                   atol=1e-5, rtol=1e-5)
+    # every query saw a positive modeled latency
+    assert all(r.latency > 0 for r in results)
+    # greedy routing kept the MN pool roughly balanced
+    assert stats.imbalance < 2.0
+
+
+def test_cluster_replication_places_tables(model_and_params):
+    model, params = model_and_params
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=4, n_replicas=2))
+    for tid, reps in eng.alloc.replicas.items():
+        assert len(reps) == 2
+    # union of shards covers all tables
+    covered = sorted({t for tids in eng._shard_tids for t in tids})
+    assert covered == list(range(CFG.dlrm.num_tables))
+
+
+def test_cluster_survives_mn_failure_mid_stream(model_and_params):
+    """Kill one MN while queries are in flight: all queries must still
+    complete, with outputs identical to the failure-free run, and no
+    traffic may reach the dead MN afterwards."""
+    model, params = model_and_params
+    reqs = make_requests(20)
+    cc = ClusterConfig(n_cn=2, m_mn=4, batch_size=16, n_replicas=2)
+
+    clean = ClusterEngine(model, params, cc)
+    res_clean, _ = clean.serve(reqs)
+    want = {r.rid: r.outputs for r in res_clean}
+
+    eng = ClusterEngine(model, params, cc)
+    t_fail = 0.03                      # mid-stream: arrivals span 0..0.1
+    res, stats = eng.serve(reqs, failures=[(t_fail, 1)])
+    assert stats.failures == 1
+    assert stats.reroutes >= 1 and stats.reinits == 0
+    assert stats.completed == len(reqs)          # no dropped queries
+    for r in res:
+        np.testing.assert_allclose(r.outputs, want[r.rid],
+                                   atol=1e-5, rtol=1e-5)
+    assert 1 in eng.dead
+    # post-failure routing never targets the dead MN
+    for (task, tid), dest in eng.routing.routes.items():
+        assert dest != 1
+
+
+def test_cluster_reinit_when_last_replica_lost(model_and_params):
+    """n_replicas=1: an MN failure loses tables entirely -> the engine
+    re-initializes shards from params and keeps serving correctly."""
+    model, params = model_and_params
+    reqs = make_requests(12)
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=3, batch_size=16, n_replicas=1))
+    lost_tables = list(eng._shard_tids[0])
+    assert lost_tables                 # MN 0 held something
+    res, stats = eng.serve(reqs, failures=[(0.02, 0)])
+    assert stats.completed == len(reqs)
+    assert stats.reinits == 1
+    want = direct_scores(model, params, reqs)
+    for r in res:
+        np.testing.assert_allclose(r.outputs, want[r.rid],
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_cluster_kernel_matches_ref_path(model_and_params):
+    model, params = model_and_params
+    reqs = make_requests(8)
+    cc = dict(n_cn=2, m_mn=4, batch_size=16, n_replicas=2)
+    r_k, _ = ClusterEngine(model, params,
+                           ClusterConfig(use_kernel=True, **cc)).serve(reqs)
+    r_r, _ = ClusterEngine(model, params,
+                           ClusterConfig(use_kernel=False, **cc)).serve(reqs)
+    for a, b in zip(r_k, r_r):
+        np.testing.assert_allclose(a.outputs, b.outputs,
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_cluster_latency_model_cross_validates(model_and_params):
+    """The engine's virtual clock is built from the analytic stage model
+    with measured G_S bytes — unloaded they must agree closely."""
+    model, params = model_and_params
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=16, n_replicas=2))
+    eng.serve(make_requests(16))
+    v = eng.validate_latency_model()
+    assert 0.3 < v["ratio"] < 3.0
+
+
+def test_batcher_parts_conservation():
+    """Batch.parts records exactly each query's row contribution."""
+    b = Batcher(batch_size=16)
+    out = []
+    sizes = [5, 40, 3, 3, 64, 1]
+    for i, size in enumerate(sizes):
+        out += b.offer(Query(i, float(i), size), float(i))
+    out += [bt for bt in [b._form(99.0)] if bt.size]
+    got = {}
+    for bt in out:
+        assert sum(n for _, n in bt.parts) == bt.size
+        for q, n in bt.parts:
+            got[q.qid] = got.get(q.qid, 0) + n
+    assert got == {i: s for i, s in enumerate(sizes)}

@@ -1,7 +1,7 @@
 """Data pipeline: query distribution, arrivals, hashing, batches."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.data import queries as q

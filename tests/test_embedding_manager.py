@@ -1,7 +1,7 @@
 """C2: greedy embedding allocation + MemAccess routing (+ properties)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import embedding_manager as em
 

@@ -31,6 +31,70 @@ def test_embedding_bag_all_padded():
     assert float(jnp.abs(out).max()) == 0.0
 
 
+# ------------------------------------------------- fused multi-table bag
+def _mixed_pooling_idx(rng, R, B, T, P):
+    """Per-bag pooling factors from 0..P: -1 padding tails of mixed
+    length, including some fully-padded bags."""
+    idx = rng.randint(0, R, (B, T, P)).astype(np.int32)
+    lens = rng.randint(0, P + 1, (B, T))
+    mask = np.arange(P)[None, None, :] < lens[..., None]
+    return np.where(mask, idx, -1).astype(np.int32)
+
+
+@pytest.mark.parametrize("T,R,D,B,P", [
+    (1, 64, 8, 4, 4), (4, 100, 16, 8, 10), (3, 257, 32, 5, 7),
+    (2, 128, 128, 16, 20),
+])
+def test_embedding_bag_fused_bitwise_fp32(T, R, D, B, P):
+    """One pallas_call over all tables == slot-order reference, bitwise."""
+    rng = np.random.RandomState(0)
+    tables = jnp.asarray(rng.randn(T, R, D), jnp.float32)
+    idx = jnp.asarray(_mixed_pooling_idx(rng, R, B, T, P))
+    out_f = np.asarray(ops.embedding_bag_fused(tables, idx))
+    out_s = np.asarray(ref.embedding_bag_seq_ref(tables, idx))
+    out_v = np.asarray(ops.embedding_bag(tables, idx))
+    assert np.array_equal(out_f, out_s)          # bitwise vs order-exact ref
+    assert np.array_equal(out_f, out_v)          # bitwise vs vmapped kernel
+    np.testing.assert_allclose(out_f, np.asarray(
+        ref.embedding_bag_ref(tables, idx)), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_fused_dtypes(dtype):
+    rng = np.random.RandomState(1)
+    tables = jnp.asarray(rng.randn(4, 64, 16), dtype)
+    idx = jnp.asarray(_mixed_pooling_idx(rng, 64, 6, 4, 8))
+    out_f = np.asarray(ops.embedding_bag_fused(tables, idx), np.float32)
+    out_r = np.asarray(ref.embedding_bag_ref(tables, idx), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(out_f, out_r, atol=tol, rtol=tol)
+
+
+def test_embedding_bag_fused_all_padded():
+    tables = jnp.ones((3, 10, 8), jnp.float32)
+    idx = -jnp.ones((4, 3, 5), jnp.int32)
+    out = ops.embedding_bag_fused(tables, idx)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_embedding_bag_fused_flat_shard_offsets():
+    """The MN-shard entry point: a flat shard buffer addressed through
+    scalar-prefetched per-table offsets, in non-contiguous slot order."""
+    rng = np.random.RandomState(2)
+    T, R, D, B, P = 5, 40, 16, 6, 6
+    tables = jnp.asarray(rng.randn(T, R, D), jnp.float32)
+    flat = tables.reshape(T * R, D)
+    idx = _mixed_pooling_idx(rng, R, B, T, P)
+    # route a shuffled subset of tables, as a shard assignment would
+    slots = np.array([3, 0, 4], np.int32)
+    offsets = jnp.asarray(slots * R)
+    out = np.asarray(ops.embedding_bag_fused_flat(
+        flat, offsets, jnp.asarray(idx[:, slots, :])))
+    want = np.asarray(ref.embedding_bag_seq_ref(
+        tables[jnp.asarray(slots)], jnp.asarray(idx[:, slots, :])))
+    assert np.array_equal(out, want)
+
+
 @pytest.mark.parametrize("B,H,Hkv,S,D,qb,kb", [
     (1, 4, 4, 128, 32, 64, 64),
     (2, 8, 2, 256, 32, 64, 128),
