@@ -59,4 +59,20 @@ def run() -> dict:
         f"completed={stf.completed}/32,reroutes={stf.reroutes},"
         f"reinits={stf.reinits}")
     out["failure"] = stf
+
+    # heterogeneous pool: NMP MNs pool on-node, ship only Fsum vectors
+    cch = ClusterConfig(n_cn=2, m_mn=4, batch_size=32, n_replicas=2,
+                        mn_types=["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"])
+    us_h = time_call(
+        lambda: ClusterEngine(model, params, cch).serve(reqs),
+        reps=1, warmup=1)
+    engh = ClusterEngine(model, params, cch)
+    _, sth = engh.serve(reqs)
+    gat_ddr = sum(st.mn_gather_bytes)
+    gat_het = sum(sth.mn_gather_bytes)
+    row("cluster_serve_hetero_us", us_h,
+        f"gather_bytes={gat_het:.0f} (ddr pool {gat_ddr:.0f}, "
+        f"{100 * (1 - gat_het / gat_ddr):.1f}% saved),"
+        f"lat_model_ratio={engh.validate_latency_model()['ratio']:.2f}")
+    out["hetero"] = sth
     return out

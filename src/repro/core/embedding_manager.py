@@ -92,8 +92,19 @@ def allocate_random(tables: Sequence[TableInfo], capacities: Sequence[int],
 
 def route_greedy(tables: Sequence[TableInfo], alloc: Allocation,
                  n_tasks: int, m: int,
-                 exclude: Sequence[int] = ()) -> RoutingTable:
-    acc = [0.0] * m
+                 exclude: Sequence[int] = (),
+                 mn_weights: Optional[Sequence[float]] = ()) -> RoutingTable:
+    """Greedy MemAccess routing; `mn_weights` makes it node-type-aware.
+
+    A weight is the relative cost of one access byte on that MN (e.g.
+    base_bw / mn_bw, so a 4x-bandwidth NMP node weighs 0.25): the greedy
+    pick minimizes accumulated *cost*, steering traffic toward the
+    faster replica while `mn_access` keeps reporting raw bytes. Uniform
+    (or omitted) weights reproduce the homogeneous behavior exactly.
+    """
+    w = list(mn_weights) if mn_weights else [1.0] * m
+    acc = [0.0] * m                          # raw access bytes (reported)
+    cost = [0.0] * m                         # weighted bytes (decision)
     routes: Dict[Tuple[int, int], int] = {}
     dead = set(exclude)
     # heaviest access streams first for tighter balance
@@ -103,10 +114,60 @@ def route_greedy(tables: Sequence[TableInfo], alloc: Allocation,
             cands = [i for i in alloc.replicas[t.tid] if i not in dead]
             if not cands:
                 raise LookupError(f"table {t.tid}: all replicas failed")
-            dest = min(cands, key=lambda i: acc[i])
+            dest = min(cands, key=lambda i: cost[i])
             acc[dest] += t.access_bytes
+            cost[dest] += t.access_bytes * w[dest]
             routes[(task, t.tid)] = dest
     return RoutingTable(routes=routes, mn_access=acc)
+
+
+def allocate_heterogeneous(tables: Sequence[TableInfo],
+                           capacities: Sequence[int],
+                           mn_types: Sequence[str],
+                           n_replicas: Optional[int] = None) -> Allocation:
+    """Node-type-aware placement for a mixed DDR/NMP pool (paper §NMP).
+
+    Policy: *hot* tables — high access density (access bytes per byte of
+    capacity) — prefer commodity DDR MNs, where re-streaming rows is
+    cheap and NMP capacity is not wasted on small tables; *capacity*
+    tables (the bulk of the pool, below-median density) prefer NMP MNs,
+    where their dominant row traffic is pooled on-node and never crosses
+    the fabric. Replicas alternate classes, so with n_replicas >= 2
+    every table keeps one copy in each class: a class-wide issue cannot
+    lose a table, and node-type-aware routing can arbitrage bandwidth
+    between the two copies. Homogeneous pools fall back to the plain
+    greedy allocator unchanged.
+    """
+    m = len(capacities)
+    if len(mn_types) != m:
+        raise ValueError(f"{len(mn_types)} MN types for {m} capacities")
+    nmp_ids = [i for i, t in enumerate(mn_types) if "nmp" in t]
+    ddr_ids = [i for i, t in enumerate(mn_types) if "nmp" not in t]
+    if not nmp_ids or not ddr_ids:
+        return allocate_greedy(tables, capacities, n_replicas)
+    classes = {"nmp": nmp_ids, "ddr": ddr_ids}
+    # clamp like allocate_greedy's avail[:nrep]: never more replicas
+    # than there are MNs to hold them
+    nrep = min(n_replicas or compute_n_replicas(tables, capacities), m)
+    dens = sorted(t.access_bytes / max(t.size_bytes, 1) for t in tables)
+    hot_cut = dens[len(dens) // 2] if dens else 0.0
+    used = [0] * m
+    replicas: Dict[int, List[int]] = {}
+    for t in sorted(tables, key=lambda t: -t.size_bytes):
+        hot = t.access_bytes / max(t.size_bytes, 1) > hot_cut
+        pref = "ddr" if hot else "nmp"
+        other = "nmp" if pref == "ddr" else "ddr"
+        chosen: List[int] = []
+        for r in range(nrep):
+            cls = pref if r % 2 == 0 else other
+            pool = [i for i in classes[cls] if i not in chosen]
+            if not pool:                 # class exhausted: spill anywhere
+                pool = [i for i in range(m) if i not in chosen]
+            dest = max(pool, key=lambda i: capacities[i] - used[i])
+            chosen.append(dest)
+            used[dest] += t.size_bytes
+        replicas[t.tid] = sorted(chosen)
+    return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
 
 
 def route_random(tables: Sequence[TableInfo], alloc: Allocation,

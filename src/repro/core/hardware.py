@@ -69,6 +69,7 @@ class NodeType:
     dimms: Dict[str, int] = field(default_factory=dict)
     nics: int = 1
     asic: bool = False
+    nmp: bool = False                # near-memory processing (pools on-node)
     mem_bw: float = LOCAL_MEM_BW     # embedding-scan bandwidth
     mem_capacity: float = 0.0        # bytes usable for embeddings
 
@@ -118,10 +119,10 @@ NODE_TYPES: Dict[str, NodeType] = {
                    mem_bw=LOCAL_MEM_BW, mem_capacity=0.9 * TB),
     # NMP variants of monolithic scale-out
     "so1s_1g_nmp": _mk("so1s_1g_nmp", kind="mono", cpus=("icelake",), gpus=1,
-                       dimms={"nmp_64gb": 16}, nics=3,
+                       dimms={"nmp_64gb": 16}, nics=3, nmp=True,
                        mem_bw=NMP_SPEEDUP * LOCAL_MEM_BW, mem_capacity=0.9 * TB),
     "so1s_4g_nmp": _mk("so1s_4g_nmp", kind="mono", cpus=("icelake",), gpus=4,
-                       dimms={"nmp_64gb": 16}, nics=3,
+                       dimms={"nmp_64gb": 16}, nics=3, nmp=True,
                        mem_bw=NMP_SPEEDUP * LOCAL_MEM_BW, mem_capacity=0.9 * TB),
     # disaggregated compute nodes
     "cn_1g": _mk("cn_1g", kind="cn", cpus=("cooperlake",), gpus=1,
@@ -132,7 +133,7 @@ NODE_TYPES: Dict[str, NodeType] = {
     "ddr_mn": _mk("ddr_mn", kind="mn", asic=True,
                   dimms={"ddr4_64gb": 16}, nics=1,
                   mem_bw=LOCAL_MEM_BW, mem_capacity=0.95 * TB),
-    "nmp_mn": _mk("nmp_mn", kind="mn", asic=True,
+    "nmp_mn": _mk("nmp_mn", kind="mn", asic=True, nmp=True,
                   dimms={"nmp_64gb": 16}, nics=1,
                   mem_bw=NMP_SPEEDUP * LOCAL_MEM_BW, mem_capacity=0.95 * TB),
 }

@@ -31,12 +31,26 @@ from repro.core.hardware import NODE_TYPES, NodeType
 
 @dataclass(frozen=True)
 class UnitSpec:
-    """{n CNs, m MNs} or (n monolithic servers, m=0)."""
+    """{n CNs, m MNs} or (n monolithic servers, m=0).
+
+    `mn_types` makes the MN pool heterogeneous: one node-type name per
+    MN (length m), e.g. ("ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn").  When
+    omitted every MN is `mn_type`, reproducing the homogeneous model
+    bit-for-bit.
+    """
     n: int
     cn_type: str
     m: int = 0
     mn_type: str = "ddr_mn"
     scheme: str = "disagg"        # disagg | distributed | su_naive | su_numa
+    mn_types: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.mn_types is not None:
+            object.__setattr__(self, "mn_types", tuple(self.mn_types))
+            if len(self.mn_types) != self.m:
+                raise ValueError(
+                    f"mn_types has {len(self.mn_types)} entries for m={self.m}")
 
     @property
     def cn(self) -> NodeType:
@@ -46,17 +60,24 @@ class UnitSpec:
     def mn(self) -> NodeType:
         return NODE_TYPES[self.mn_type]
 
+    def mn_node_types(self) -> Tuple[NodeType, ...]:
+        names = self.mn_types or (self.mn_type,) * self.m
+        return tuple(NODE_TYPES[t] for t in names)
+
     def capex(self) -> float:
-        return self.n * self.cn.capex + self.m * self.mn.capex
+        return (self.n * self.cn.capex
+                + sum(mn.capex for mn in self.mn_node_types()))
 
     def power(self) -> float:
-        return self.n * self.cn.power + self.m * self.mn.power
+        return (self.n * self.cn.power
+                + sum(mn.power for mn in self.mn_node_types()))
 
     def nodes(self) -> int:
         return self.n + self.m
 
     def mem_capacity(self) -> float:
-        return self.n * self.cn.mem_capacity + self.m * self.mn.mem_capacity
+        return (self.n * self.cn.mem_capacity
+                + sum(mn.mem_capacity for mn in self.mn_node_types()))
 
 
 @dataclass
@@ -105,7 +126,7 @@ class ServingUnitModel:
             return 2 * hw.LOCAL_MEM_BW
         if u.scheme == "distributed":
             return u.n * u.cn.mem_bw
-        return u.m * u.mn.mem_bw
+        return sum(mn.mem_bw for mn in u.mn_node_types())
 
     def _cn_cores(self) -> int:
         cn = self.unit.cn

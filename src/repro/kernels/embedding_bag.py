@@ -135,3 +135,75 @@ def embedding_bag_fused(tables: jax.Array, idx: jax.Array,
     out = embedding_bag_fused_flat(tables.reshape(T * R, D), offsets, idx,
                                    interpret=interpret)
     return out.astype(tables.dtype)
+
+
+# ------------------------------------------------------ near-memory pooling
+def _nmp_kernel(idx_ref, off_ref, table_ref, out_blk, *, pool: int):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+
+    def body(p, acc):
+        r = off_ref[t] + jnp.maximum(idx_ref[b, t, p], 0)
+        row = table_ref[pl.ds(r, 1), :].astype(jnp.float32)
+        # exact skip for padding: select the OLD accumulator, never add 0.0
+        # (keeps -0.0 rows bitwise and matches the fused kernel's predicate)
+        return jnp.where(idx_ref[b, t, p] >= 0, acc + row[None], acc)
+
+    acc = jax.lax.fori_loop(0, pool, body,
+                            jnp.zeros(out_blk.shape, jnp.float32))
+    out_blk[...] = acc
+
+
+def embedding_bag_nmp_flat(flat_table: jax.Array, offsets: jax.Array,
+                           idx: jax.Array,
+                           interpret: bool = True) -> jax.Array:
+    """On-MN pooling kernel for an NMP memory node (paper §NMP, Fig. 14).
+
+    Same contract as ``embedding_bag_fused_flat`` — flat_table
+    (sum_t R_t, D) with scalar-prefetched per-table ``offsets`` and
+    table-local ``idx`` (B, T, P), -1 padded — but a different execution
+    shape that mirrors the NMP-DIMM: the grid walks (table, bag) — one
+    step per *pooled output* — and the whole bag reduces inside the
+    kernel body with a sequential ``fori_loop`` over pooling slots,
+    accumulating in a local register/VMEM accumulator.  Rows are fetched
+    with dynamic slices from the resident shard buffer (the DIMM-rank
+    fetch; on real NMP hardware each fetch stays inside the rank), and
+    only the D-dim pooled Fsum is ever written out — the memory node
+    ships ``tables x D`` bytes to the CN instead of ``rows x D``.
+
+    Slots accumulate in ascending order, the same order the fused
+    CN-side bag revisits its output block, so fp32 results are bitwise
+    identical to ``embedding_bag_fused_flat`` and to
+    ``kernels.ref.embedding_bag_seq_ref`` (tests pin this).
+    """
+    Rtot, D = flat_table.shape
+    B, T, P = idx.shape
+
+    def table_map(t, b, idx_ref, off_ref):
+        return 0, 0                     # shard buffer resident on the node
+
+    def out_map(t, b, idx_ref, off_ref):
+        return b, t, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, B),
+        in_specs=[pl.BlockSpec((Rtot, D), table_map)],
+        out_specs=pl.BlockSpec((1, 1, D), out_map),
+    )
+    return pl.pallas_call(
+        functools.partial(_nmp_kernel, pool=P),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        interpret=interpret,
+    )(idx, offsets, flat_table)
+
+
+def embedding_bag_nmp(tables: jax.Array, idx: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    """tables: (T, R, D); idx: (B, T, P) -> pooled (B, T, D) on-node."""
+    T, R, D = tables.shape
+    offsets = jnp.arange(T, dtype=jnp.int32) * R
+    out = embedding_bag_nmp_flat(tables.reshape(T * R, D), offsets, idx,
+                                 interpret=interpret)
+    return out.astype(tables.dtype)

@@ -42,6 +42,21 @@ def embedding_bag_fused_flat(flat_table, offsets, idx, interpret: bool = None):
                                         interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_nmp(tables, idx, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _eb.embedding_bag_nmp(tables, idx, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_nmp_flat(flat_table, offsets, idx, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _eb.embedding_bag_nmp_flat(flat_table, offsets, idx,
+                                      interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "q_block",
                                              "kv_block", "interpret"))
 def flash_attention(q, k, v, causal: bool = True, q_block: int = 128,

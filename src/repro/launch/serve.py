@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --requests 64
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --cns 2 --mns 4 --fail-mn 1
+  PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
+      --mns 4 --mn-type "2xddr_mn+2xnmp_mn"        # heterogeneous pool
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
 """
 from __future__ import annotations
@@ -16,7 +18,8 @@ import numpy as np
 from repro import configs
 from repro.data.queries import QueryDist, dlrm_batch
 from repro.models import registry
-from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.cluster import (ClusterConfig, ClusterEngine,
+                                   parse_mn_types)
 from repro.serving.engine import DLRMServingEngine, LMServingEngine, Request
 
 
@@ -34,6 +37,10 @@ def main(argv=None):
     p.add_argument("--cns", type=int, default=2)
     p.add_argument("--mns", type=int, default=4)
     p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--mn-type", default="ddr_mn",
+                   help="memory-pool spec: one type for the whole pool "
+                        "('nmp_mn'), a comma list, or counted groups "
+                        "('2xddr_mn+2xnmp_mn')")
     p.add_argument("--fail-mn", type=int, default=None,
                    help="kill this MN mid-stream (cluster mode)")
     p.add_argument("--no-kernel", dest="use_kernel", action="store_false",
@@ -56,23 +63,34 @@ def main(argv=None):
                                     "indices": b["indices"]},
                                 int(s), 0.001 * i))
         if args.cluster:
+            mn_types = parse_mn_types(args.mn_type, args.mns)
             engine = ClusterEngine(model, params, ClusterConfig(
                 n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
-                n_replicas=args.replicas, use_kernel=args.use_kernel))
+                n_replicas=args.replicas, use_kernel=args.use_kernel,
+                mn_types=mn_types))
             failures = ([] if args.fail_mn is None
                         else [(0.001 * args.requests / 2, args.fail_mn)])
             results, stats = engine.serve(reqs, failures=failures)
             scores = np.concatenate([r.outputs for r in results])
-            print(f"[serve] cluster {{{args.cns} CN, {args.mns} MN}} "
-                  f"scored {stats.completed} queries "
+            pool = ",".join(mn_types)
+            print(f"[serve] cluster {{{args.cns} CN, {args.mns} MN "
+                  f"[{pool}]}} scored {stats.completed} queries "
                   f"({scores.size} samples), mean CTR {scores.mean():.4f}")
             print(f"[serve] p50 {stats.p50 * 1e3:.3f}ms "
                   f"p95 {stats.p95 * 1e3:.3f}ms  "
                   f"MN imbalance {stats.imbalance:.3f}  "
                   f"failures={stats.failures} reroutes={stats.reroutes}")
+            mem = sum(stats.mn_access_bytes)
+            gat = sum(stats.mn_gather_bytes)
+            if any(engine.mn_nmp):
+                print(f"[serve] NMP near-memory pooling: scanned "
+                      f"{mem / 1e6:.2f}MB on-node, shipped "
+                      f"{gat / 1e6:.2f}MB over the fabric "
+                      f"({100 * (1 - gat / max(mem, 1)):.1f}% gather "
+                      f"bytes saved vs raw rows)")
             v = engine.validate_latency_model()
             print(f"[serve] latency model cross-check: engine/analytic "
-                  f"= {v['ratio']:.2f}")
+                  f"= {v['ratio']:.2f} (MN stage {v['mn_stage_ratio']:.2f})")
         else:
             engine = DLRMServingEngine(model, params, batch_size=args.batch,
                                        use_kernel=args.use_kernel)

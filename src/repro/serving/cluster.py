@@ -11,12 +11,23 @@ ingress ``Batcher`` (large queries split, small queries fused — Fig. 3a),
 each batch lands on the least-loaded CN, and that CN's task id selects the
 rows of the MemAccess routing table (``core.embedding_manager``) that
 scatter its table lookups over the MN pool.  Every MN holds a replica
-shard — the stacked tables the greedy allocator placed on it — and pools
-its routed tables with ONE fused multi-table Pallas call
-(``kernels.embedding_bag.embedding_bag_fused_flat``: the shard's tables
-flattened row-wise, per-table row offsets scalar-prefetched).  Only pooled
-(B, T_j, D) Fsum vectors return to the CN (the near-memory-reduction
-contract), which gathers them and runs DenseNet + sigmoid.
+shard — the stacked tables the allocator placed on it — and the pool may
+mix node types (paper §NMP, Fig. 14):
+
+- **DDR MN**: passive remote memory — the shard's raw rows stream back to
+  the owning CN (``rows x D`` gather bytes), which pools them with the
+  fused CN-side bag (``kernels.embedding_bag.embedding_bag_fused_flat``).
+- **NMP MN**: pools *on the memory node* with the near-memory kernel
+  (``kernels.embedding_bag.embedding_bag_nmp_flat``) at NMP bandwidth;
+  only pooled (B, T_j, D) Fsum vectors cross the fabric (``tables x D``
+  gather bytes) and the CN skips its pooling stage for that shard.
+
+Both paths accumulate pooling slots in the same ascending order, so a
+mixed DDR+NMP deployment scores bitwise-identically to the all-DDR
+baseline while moving strictly fewer gather bytes.  Placement is
+node-type-aware (``core.embedding_manager.allocate_heterogeneous``: hot
+tables on DDR, capacity tables on NMP, replicas spanning both classes)
+and routing weighs replicas by per-node bandwidth.
 
 Failures (§IV-A/§IV-D): ``fail_mn`` marks an MN dead and rebuilds routing
 over the surviving replicas (fast path) or re-initializes the allocation
@@ -25,10 +36,10 @@ a failure landing inside a batch's MN stage re-issues that batch's lookups
 on the survivors — no query is ever dropped.
 
 Latency accounting is wall-clock-free: a virtual clock driven by the
-analytic unit model's stage times (G_P, scatter, G_S from *measured*
-per-MN access bytes, gather, G_D), so per-query latencies can be
-cross-validated against ``ServingUnitModel.stage_times`` and the DES
-(``validate_latency_model``).
+analytic unit model's stage times (G_P, scatter, G_S + gather from
+*measured* per-MN access/gather bytes at *per-node-type* bandwidths,
+G_D), so per-query latencies can be cross-validated against
+``ServingUnitModel.stage_times`` and the DES (``validate_latency_model``).
 """
 from __future__ import annotations
 
@@ -42,9 +53,40 @@ import numpy as np
 
 from repro.core import embedding_manager as em
 from repro.core import failure as fail_mod
+from repro.core import hardware as hw
+from repro.core.hardware import NODE_TYPES
 from repro.core.scheduler import Batch, Batcher, Query
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
 from repro.serving.engine import Request, Result
+
+
+def _validate_mn_types(types: Sequence[str], m_mn: int) -> List[str]:
+    if len(types) != m_mn:
+        raise ValueError(f"{len(types)} MN types for a pool of {m_mn}")
+    for t in types:
+        if t not in NODE_TYPES or NODE_TYPES[t].kind != "mn":
+            raise ValueError(f"unknown memory-node type {t!r}")
+    return list(types)
+
+
+def parse_mn_types(spec: str, m_mn: int) -> List[str]:
+    """Parse a CLI memory-pool spec into a per-MN node-type list.
+
+    Accepts a single type (``"nmp_mn"`` — the whole pool), an explicit
+    comma list (``"ddr_mn,ddr_mn,nmp_mn,nmp_mn"``), or counted groups
+    (``"2xddr_mn+2xnmp_mn"``).  The expansion must match the pool size.
+    """
+    types: List[str] = []
+    for part in spec.replace("+", ",").split(","):
+        part = part.strip()
+        if "x" in part and part.split("x", 1)[0].isdigit():
+            count, name = part.split("x", 1)
+            types += [name.strip()] * int(count)
+        elif part:
+            types.append(part)
+    if len(types) == 1:
+        types = types * m_mn
+    return _validate_mn_types(types, m_mn)
 
 
 @dataclass
@@ -54,10 +96,16 @@ class ClusterConfig:
     batch_size: int = 64
     max_wait_s: float = 0.002     # ingress batcher flush deadline
     n_replicas: int = 2           # embedding replication factor
-    use_kernel: bool = True       # fused Pallas bag on the MN hot path
+    use_kernel: bool = True       # Pallas bag kernels on the hot path
     cn_type: str = "cn_1g"
-    mn_type: str = "ddr_mn"
+    mn_type: str = "ddr_mn"       # default type for the whole pool
+    mn_types: Optional[Sequence[str]] = None   # per-MN override, len m_mn
     mn_recovery_s: float = fail_mod.recovery_cost_s("mn")
+
+    def resolved_mn_types(self) -> List[str]:
+        types = (list(self.mn_types) if self.mn_types is not None
+                 else [self.mn_type] * self.m_mn)
+        return _validate_mn_types(types, self.m_mn)
 
 
 @dataclass
@@ -69,7 +117,9 @@ class ClusterStats:
     failures: int
     reroutes: int
     reinits: int
-    mn_access_bytes: List[float]
+    mn_access_bytes: List[float]  # memory-bus bytes scanned per MN
+    mn_gather_bytes: List[float]  # bytes each MN shipped to CNs (fabric)
+    mn_types: List[str]
     imbalance: float              # max/mean access over surviving MNs
 
 
@@ -87,21 +137,30 @@ class ClusterEngine:
                                   r.embed_dim)
         self.tables = [em.TableInfo(t, self.R, self.D, float(r.avg_pooling))
                        for t in range(self.T)]
+        # heterogeneous pool: one node type per MN (all cfg.mn_type when
+        # no per-MN override is given)
+        self.mn_types = self.cfg.resolved_mn_types()
+        self.mn_nmp = [NODE_TYPES[t].nmp for t in self.mn_types]
+        self.mn_bw = [NODE_TYPES[t].mem_bw for t in self.mn_types]
+        self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
         # MN capacity sized so the requested replication factor fits, with
         # one table of slack per MN for greedy placement skew
         total = sum(t.size_bytes for t in self.tables)
         cap = (math.ceil(self.cfg.n_replicas * total / self.cfg.m_mn)
                + self.tables[0].size_bytes)
         self.capacities = [cap] * self.cfg.m_mn
-        self.alloc = em.allocate_greedy(self.tables, self.capacities,
-                                        n_replicas=self.cfg.n_replicas)
+        self.alloc = em.allocate_heterogeneous(
+            self.tables, self.capacities, self.mn_types,
+            n_replicas=self.cfg.n_replicas)
         self.dead: Set[int] = set()
         self.routing = em.route_greedy(self.tables, self.alloc,
-                                       self.cfg.n_cn, self.cfg.m_mn)
+                                       self.cfg.n_cn, self.cfg.m_mn,
+                                       mn_weights=self._route_w)
         self._build_shards()
         self.unit_model = unit_model or ServingUnitModel(
             model.cfg, UnitSpec(self.cfg.n_cn, self.cfg.cn_type,
-                                self.cfg.m_mn, self.cfg.mn_type))
+                                self.cfg.m_mn, self.cfg.mn_type,
+                                mn_types=tuple(self.mn_types)))
         self._dense_step = jax.jit(
             lambda p, d, pooled: jax.nn.sigmoid(
                 model.dense_forward(p, d, pooled)))
@@ -110,6 +169,10 @@ class ClusterEngine:
         self.reroutes = 0
         self.reinits = 0
         self.mn_access_bytes = np.zeros(self.cfg.m_mn)
+        self.mn_gather_bytes = np.zeros(self.cfg.m_mn)
+        self.mn_stage_s = np.zeros(self.cfg.m_mn)   # modeled G_S per MN
+        self._mn_stage_max_sum = 0.0                # per-batch gating stage
+        self._n_batches = 0
 
     # ------------------------------------------------------------- shards
     def _build_shards(self) -> None:
@@ -150,16 +213,19 @@ class ClusterEngine:
             # full strength under a fresh allocation
             self.reinits += 1
             self.dead.clear()
-            self.alloc = em.allocate_greedy(self.tables, self.capacities,
-                                            n_replicas=self.cfg.n_replicas)
+            self.alloc = em.allocate_heterogeneous(
+                self.tables, self.capacities, self.mn_types,
+                n_replicas=self.cfg.n_replicas)
             self.routing = em.route_greedy(self.tables, self.alloc,
-                                           self.cfg.n_cn, self.cfg.m_mn)
+                                           self.cfg.n_cn, self.cfg.m_mn,
+                                           mn_weights=self._route_w)
             self._build_shards()
         else:
             self.reroutes += 1
             self.routing = em.route_greedy(self.tables, self.alloc,
                                            self.cfg.n_cn, self.cfg.m_mn,
-                                           exclude=sorted(self.dead))
+                                           exclude=sorted(self.dead),
+                                           mn_weights=self._route_w)
 
     def recover_mn(self, j: int) -> None:
         if j not in self.dead:
@@ -167,33 +233,46 @@ class ClusterEngine:
         self.dead.discard(j)
         self.routing = em.route_greedy(self.tables, self.alloc,
                                        self.cfg.n_cn, self.cfg.m_mn,
-                                       exclude=sorted(self.dead))
+                                       exclude=sorted(self.dead),
+                                       mn_weights=self._route_w)
 
     # ------------------------------------------------------ real compute
     def _mn_pool(self, j: int, tids: Sequence[int],
                  idx_sub: np.ndarray) -> jax.Array:
-        """Pool MN j's routed tables: one fused kernel call per shard."""
+        """Pool MN j's routed tables — on-node for NMP, CN-side for DDR.
+
+        An NMP MN reduces each bag locally with the near-memory kernel
+        and ships only pooled vectors; a DDR MN ships raw rows, which
+        the owning CN pools with the fused multi-table bag.  Both
+        accumulate slots in ascending order, so the scores are bitwise
+        independent of the pool's node-type mix.
+        """
         slots = np.asarray([self._shard_slot[j][t] for t in tids], np.int32)
         if self.cfg.use_kernel:
             from repro.kernels import ops
             offsets = jnp.asarray(slots * self.R)
-            return ops.embedding_bag_fused_flat(
-                self._shard_flat[j], offsets, jnp.asarray(idx_sub))
+            bag = (ops.embedding_bag_nmp_flat if self.mn_nmp[j]
+                   else ops.embedding_bag_fused_flat)
+            return bag(self._shard_flat[j], offsets, jnp.asarray(idx_sub))
         from repro.models.dlrm import embedding_bag_ref
         stack = self._shard_flat[j].reshape(-1, self.R, self.D)[
             jnp.asarray(slots)]
         return embedding_bag_ref(stack, jnp.asarray(idx_sub))
 
     def _execute(self, task: int, dense: np.ndarray, idx: np.ndarray
-                 ) -> Tuple[np.ndarray, np.ndarray]:
-        """Scatter -> per-MN fused pooling -> gather -> DenseNet.
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Scatter -> per-MN pooling -> gather -> DenseNet.
 
-        Returns (scores, per-MN access bytes actually touched)."""
+        Returns (scores, per-MN memory-bus bytes scanned, per-MN gather
+        bytes shipped to the CN).  For a DDR MN the two are equal (raw
+        rows cross the fabric); an NMP MN scans the same rows locally
+        but ships only ``valid rows x T_j x D`` pooled bytes."""
         shards = em.shard_assignment(self.alloc, self.routing, self.T,
                                      self.cfg.m_mn, task)
         B = dense.shape[0]
         pooled = np.zeros((B, self.T, self.D), np.float32)
-        bytes_j = np.zeros(self.cfg.m_mn)
+        mem_j = np.zeros(self.cfg.m_mn)
+        gat_j = np.zeros(self.cfg.m_mn)
         for j, tids in enumerate(shards):
             if not tids:
                 continue
@@ -201,11 +280,16 @@ class ClusterEngine:
                 raise LookupError(f"routing targets dead MN {j}")
             sub = idx[:, tids, :]
             pooled[:, tids, :] = np.asarray(self._mn_pool(j, tids, sub))
-            bytes_j[j] = float((sub >= 0).sum()) * self.D * 4
+            mem_j[j] = float((sub >= 0).sum()) * self.D * 4
+            if self.mn_nmp[j]:
+                live_rows = int((sub >= 0).any(axis=(1, 2)).sum())
+                gat_j[j] = float(live_rows * len(tids)) * self.D * 4
+            else:
+                gat_j[j] = mem_j[j]
         scores = np.asarray(self._dense_step(self.params,
                                              jnp.asarray(dense),
                                              jnp.asarray(pooled)))
-        return scores, bytes_j
+        return scores, mem_j, gat_j
 
     # ---------------------------------------------------------- serving
     def serve(self, requests: List[Request],
@@ -228,10 +312,21 @@ class ClusterEngine:
         latencies: List[float] = []
 
         st = self.unit_model.stage_times(cfg.batch_size)
-        mn_bw = self.unit_model.unit.mn.mem_bw
+        mn_bw = np.asarray(self.mn_bw)
         cn_pre_free = np.zeros(cfg.n_cn)
         cn_gpu_free = np.zeros(cfg.n_cn)
         mn_barrier = 0.0              # sequential lock-step over the pool
+
+        def mn_stage(mem_j: np.ndarray, gat_j: np.ndarray
+                     ) -> Tuple[np.ndarray, float]:
+            """G_S + gather time for one batch: every MN scans (and, for
+            NMP, pools — a bandwidth-bound streaming reduction) locally
+            in parallel at its own memory bandwidth, then the batch's
+            gather bytes serialize into the owning CN's back-end NIC.
+            Returns (per-MN stage contributions, batch gating time)."""
+            stage_j = mem_j / mn_bw + gat_j / hw.NIC_BW
+            gate = float((mem_j / mn_bw).max() + gat_j.sum() / hw.NIC_BW)
+            return stage_j, gate
 
         def inject(upto: float) -> None:
             while fail_q and fail_q[0][0] <= upto:
@@ -265,25 +360,28 @@ class ClusterEngine:
             # MNs that died during G_P/scatter are gone before this batch's
             # MN stage begins: re-route first, then execute
             inject(mn_start)
-            scores, bytes_j = self._execute(task, dense, idx)
-            t_mn = float(bytes_j.max()) / mn_bw       # slowest MN gates
+            scores, mem_j, gat_j = self._execute(task, dense, idx)
+            stage_j, t_mn = mn_stage(mem_j, gat_j)    # slowest MN + gather
 
             # a failure landing inside this batch's MN stage hits packets
             # in flight: rebuild routing, re-issue on the survivors
             while (fail_q and mn_start < fail_q[0][0] <= mn_start + t_mn):
                 t_fail, j = fail_q.pop(0)
-                hit = bytes_j[j] > 0
+                hit = mem_j[j] > 0
                 self.fail_mn(j)
                 if hit:
-                    scores, bytes_j = self._execute(task, dense, idx)
-                    t_mn = float(bytes_j.max()) / mn_bw
+                    scores, mem_j, gat_j = self._execute(task, dense, idx)
+                    stage_j, t_mn = mn_stage(mem_j, gat_j)
                     mn_start = t_fail + cfg.mn_recovery_s
             mn_done = mn_start + t_mn
             mn_barrier = mn_done
-            self.mn_access_bytes += bytes_j
+            self.mn_access_bytes += mem_j
+            self.mn_gather_bytes += gat_j
+            self.mn_stage_s += stage_j
+            self._mn_stage_max_sum += t_mn
+            self._n_batches += 1
 
-            g_start = max(mn_done + st.t_comm_out * scale,
-                          cn_gpu_free[task])
+            g_start = max(mn_done, cn_gpu_free[task])
             done = g_start + st.t_dense * scale
             cn_gpu_free[task] = done
 
@@ -331,6 +429,8 @@ class ClusterEngine:
             reroutes=self.reroutes,
             reinits=self.reinits,
             mn_access_bytes=list(self.mn_access_bytes),
+            mn_gather_bytes=list(self.mn_gather_bytes),
+            mn_types=list(self.mn_types),
             imbalance=em.imbalance(live),
         )
         results.sort(key=lambda r: r.rid)
@@ -341,26 +441,30 @@ class ClusterEngine:
         """Unloaded single-batch latency: engine clock vs analytic model.
 
         The engine's virtual clock uses the analytic stage times for
-        G_P/comm/G_D but *measured* access bytes for G_S, so the ratio
-        engine/analytic isolates how far observed pooling + routing
-        imbalance sit from the model's uniform assumption (~1 when the
-        workload matches cfg.avg_pooling)."""
+        G_P/comm-in/G_D but *measured* per-MN access + gather bytes at
+        per-node-type bandwidths for the G_S + gather stage, so the
+        ratio engine/analytic isolates how far the observed pooling,
+        routing imbalance, and node-type mix sit from the analytic
+        model's uniform near-memory-reduction assumption (~1 when the
+        workload matches cfg.avg_pooling on a homogeneous pool; > 1 on
+        DDR pools, whose raw-row gather the analytic Fsum-only comm
+        model undercounts — by construction the very bytes an NMP pool
+        saves).  `engine_mn_stage_s` vs `analytic_mn_stage_s` compares
+        the memory+gather stage in isolation (the NMP regression tests
+        pin this band)."""
         st = self.unit_model.stage_times(self.cfg.batch_size)
         analytic = st.total()
-        sparse_measured = 0.0
-        if self.mn_access_bytes.max() > 0:
-            per_batch = self.mn_access_bytes.max() / max(
-                1, self._batches_seen())
-            sparse_measured = per_batch / self.unit_model.unit.mn.mem_bw
-        engine = (st.t_pre + st.t_comm_in + sparse_measured
-                  + st.t_comm_out + st.t_dense)
+        analytic_mn = st.t_sparse + st.t_comm_out
+        mn_measured = (self._mn_stage_max_sum / self._n_batches
+                       if self._n_batches else 0.0)
+        engine = st.t_pre + st.t_comm_in + mn_measured + st.t_dense
         return {"analytic_s": analytic, "engine_s": engine,
-                "ratio": engine / analytic if analytic else 1.0}
+                "ratio": engine / analytic if analytic else 1.0,
+                "engine_mn_stage_s": mn_measured,
+                "analytic_mn_stage_s": analytic_mn,
+                "mn_stage_ratio": (mn_measured / analytic_mn
+                                   if analytic_mn else 1.0)}
 
-    def _batches_seen(self) -> int:
-        total_bytes = self.mn_access_bytes.sum()
-        if total_bytes == 0:
-            return 0
-        per_batch = (self.cfg.batch_size * self.T
-                     * self.model.cfg.dlrm.avg_pooling * self.D * 4)
-        return max(1, int(round(total_bytes / per_batch)))
+    @property
+    def batches_seen(self) -> int:
+        return self._n_batches

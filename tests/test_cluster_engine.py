@@ -150,6 +150,132 @@ def test_cluster_latency_model_cross_validates(model_and_params):
     assert 0.3 < v["ratio"] < 3.0
 
 
+# ------------------------------------------------------ NMP memory nodes
+MIX = ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]
+
+
+def test_parse_mn_types_specs():
+    from repro.serving.cluster import parse_mn_types
+    assert parse_mn_types("ddr_mn", 3) == ["ddr_mn"] * 3
+    assert parse_mn_types("nmp_mn", 2) == ["nmp_mn"] * 2
+    assert parse_mn_types("ddr_mn,nmp_mn", 2) == ["ddr_mn", "nmp_mn"]
+    assert parse_mn_types("2xddr_mn+2xnmp_mn", 4) == MIX
+    with pytest.raises(ValueError):
+        parse_mn_types("2xddr_mn", 4)          # wrong pool size
+    with pytest.raises(ValueError):
+        parse_mn_types("cn_1g", 1)             # not a memory node
+
+
+def test_cluster_hetero_bitwise_and_gather_savings(model_and_params):
+    """Acceptance: a mixed DDR+NMP cluster scores bitwise-identically to
+    the all-DDR baseline while NMP-sourced shards move strictly fewer
+    gather bytes at strictly lower modeled G_S time."""
+    model, params = model_and_params
+    reqs = make_requests(20)
+    cc = dict(n_cn=2, m_mn=4, batch_size=16, n_replicas=2)
+    eng_d = ClusterEngine(model, params, ClusterConfig(**cc))
+    res_d, st_d = eng_d.serve(reqs)
+    eng_m = ClusterEngine(model, params, ClusterConfig(mn_types=MIX, **cc))
+    res_m, st_m = eng_m.serve(reqs)
+
+    want = {r.rid: r.outputs for r in res_d}
+    assert st_m.completed == len(reqs)
+    for r in res_m:
+        assert np.array_equal(r.outputs, want[r.rid])   # bitwise
+
+    # NMP shards ship pooled Fsum vectors: strictly fewer fabric bytes
+    # than the rows they scan; DDR shards ship exactly what they scan
+    for j, t in enumerate(st_m.mn_types):
+        if st_m.mn_access_bytes[j] == 0:
+            continue
+        if "nmp" in t:
+            assert st_m.mn_gather_bytes[j] < st_m.mn_access_bytes[j]
+        else:
+            assert st_m.mn_gather_bytes[j] == st_m.mn_access_bytes[j]
+    assert sum(st_m.mn_gather_bytes) < sum(st_d.mn_gather_bytes)
+
+    # modeled per-MN G_S time: the NMP shards finish strictly faster
+    # even though node-type-aware routing steers them MORE traffic
+    ddr_stage = [eng_m.mn_stage_s[j] for j in range(4) if not eng_m.mn_nmp[j]]
+    nmp_stage = [eng_m.mn_stage_s[j] for j in range(4) if eng_m.mn_nmp[j]]
+    assert max(nmp_stage) < min(ddr_stage)
+    nmp_mem = sum(st_m.mn_access_bytes[j] for j in range(4)
+                  if eng_m.mn_nmp[j])
+    ddr_mem = sum(st_m.mn_access_bytes[j] for j in range(4)
+                  if not eng_m.mn_nmp[j])
+    assert nmp_mem > ddr_mem
+
+    # all-NMP pool: strictly lower batch-gating MN stage than all-DDR
+    eng_n = ClusterEngine(model, params, ClusterConfig(
+        mn_type="nmp_mn", **cc))
+    res_n, st_n = eng_n.serve(reqs)
+    for r in res_n:
+        assert np.array_equal(r.outputs, want[r.rid])
+    assert (eng_n._mn_stage_max_sum / eng_n._n_batches
+            < eng_d._mn_stage_max_sum / eng_d._n_batches)
+
+
+def test_cluster_hetero_replicas_span_classes(model_and_params):
+    """With replication >= 2 in a mixed pool, every table keeps one copy
+    in each node class (type-diverse replication)."""
+    model, params = model_and_params
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=4, n_replicas=2, mn_types=MIX))
+    for tid, reps in eng.alloc.replicas.items():
+        classes = {("nmp" if eng.mn_nmp[j] else "ddr") for j in reps}
+        assert classes == {"ddr", "nmp"}
+
+
+def test_cluster_hetero_survives_mn_failure(model_and_params):
+    """Killing a DDR MN in a mixed pool mid-stream re-routes its tables
+    onto their NMP replicas with bitwise-identical outputs."""
+    model, params = model_and_params
+    reqs = make_requests(16)
+    cc = ClusterConfig(n_cn=2, m_mn=4, batch_size=16, n_replicas=2,
+                       mn_types=MIX)
+    clean = ClusterEngine(model, params, cc)
+    res_c, _ = clean.serve(reqs)
+    eng = ClusterEngine(model, params, cc)
+    res_f, stats = eng.serve(reqs, failures=[(0.03, 0)])
+    assert stats.completed == len(reqs)
+    assert stats.reroutes >= 1 and stats.reinits == 0
+    want = {r.rid: r.outputs for r in res_c}
+    for r in res_f:
+        assert np.array_equal(r.outputs, want[r.rid])
+    for (task, tid), dest in eng.routing.routes.items():
+        assert dest != 0
+
+
+def test_cluster_nmp_latency_model_regression(model_and_params):
+    """Satellite: the executable all-NMP cluster's virtual-clock latency
+    agrees with the analytic `nmp_mn` ServingUnitModel prediction.
+
+    Full batches (query size == batch size) isolate the model from
+    partial-batch scaling; stated tolerance: engine/analytic within
+    [0.5, 2.0] end-to-end and the measured G_S+gather stage within
+    [0.3, 2.0] of the analytic sparse+comm-out stages."""
+    from repro.core.serving_unit import ServingUnitModel, UnitSpec
+    model, params = model_and_params
+    rng = np.random.RandomState(3)
+    reqs = []
+    for i in range(12):
+        b = dlrm_batch(CFG, 16, rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]}, 16, 0.005 * i))
+    eng = ClusterEngine(model, params, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=16, n_replicas=2, mn_type="nmp_mn"))
+    eng.serve(reqs)
+    assert all(eng.mn_nmp)
+    # the engine's analytic reference IS the nmp_mn unit spec
+    assert eng.unit_model.unit.mn_type == "nmp_mn"
+    want = ServingUnitModel(model.cfg, UnitSpec(
+        2, "cn_1g", 4, "nmp_mn")).stage_times(16).total()
+    v = eng.validate_latency_model()
+    assert v["analytic_s"] == pytest.approx(want)
+    assert 0.5 < v["ratio"] < 2.0
+    assert 0.3 < v["mn_stage_ratio"] < 2.0
+
+
 def test_batcher_parts_conservation():
     """Batch.parts records exactly each query's row contribution."""
     b = Batcher(batch_size=16)

@@ -1,0 +1,139 @@
+"""Property-based ClusterEngine routing invariants (issue #2 satellite).
+
+Across random {n CN, m MN, replication, DDR/NMP mix} configurations:
+
+- every (task, table) pair routes to exactly one live replica-holding MN;
+- per-task shard assignments partition the table set, and the per-MN
+  scatter accounts for every valid lookup exactly once (shard row counts
+  sum to the batch's rows);
+- an MN failure + re-route preserves bitwise outputs.
+
+Plain parametrized fallbacks cover pinned configs on bare environments
+(the hypothesis shim skips the property variants there).
+"""
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs import rm1
+from repro.core import embedding_manager as em
+from repro.data.queries import QueryDist, dlrm_batch
+from repro.models.dlrm import DLRMModel
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-prop",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+MODEL = DLRMModel(CFG)
+PARAMS = MODEL.init(0)
+T = CFG.dlrm.num_tables
+
+
+def _requests(n, seed):
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=4.0, max_size=12).sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.004 * i))
+    return reqs
+
+
+def _engine(n_cn, m_mn, nrep, nmp_count):
+    mn_types = (["nmp_mn"] * nmp_count
+                + ["ddr_mn"] * (m_mn - nmp_count))
+    return ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=nrep,
+        mn_types=mn_types))
+
+
+def _check_routing_invariants(n_cn, m_mn, nrep, nmp_count):
+    eng = _engine(n_cn, m_mn, nrep, nmp_count)
+    # every table holds nrep distinct replicas
+    for tid, reps in eng.alloc.replicas.items():
+        assert len(reps) == len(set(reps)) == min(nrep, m_mn)
+    # every (task, table) routes to exactly one live replica-holding MN
+    for task in range(n_cn):
+        for tid in range(T):
+            dest = eng.routing.routes[(task, tid)]
+            assert dest in eng.alloc.replicas[tid]
+            assert dest not in eng.dead
+        # shard assignment partitions the table set for this task
+        shards = em.shard_assignment(eng.alloc, eng.routing, T, m_mn, task)
+        routed = sorted(t for tids in shards for t in tids)
+        assert routed == list(range(T))
+    # scatter accounting: every valid lookup lands on exactly one MN, so
+    # per-MN shard row counts sum to the batch's rows (and bytes)
+    rng = np.random.RandomState(7)
+    batch = dlrm_batch(CFG, 8, rng)
+    _, mem_j, gat_j = eng._execute(0, batch["dense"], batch["indices"])
+    valid = int((batch["indices"] >= 0).sum())
+    assert sum(mem_j) == pytest.approx(valid * CFG.dlrm.embed_dim * 4)
+    # DDR shards ship what they scan; NMP shards ship strictly less
+    # whenever pooling compresses (> 1 valid slot somewhere in the bag)
+    for j in range(m_mn):
+        if mem_j[j] == 0:
+            continue
+        if eng.mn_nmp[j]:
+            assert gat_j[j] <= mem_j[j]
+        else:
+            assert gat_j[j] == mem_j[j]
+
+
+def _check_failure_preserves_outputs(n_cn, m_mn, nrep, nmp_count,
+                                     fail_mn, t_fail):
+    reqs = _requests(10, seed=fail_mn + 13)
+    clean = _engine(n_cn, m_mn, nrep, nmp_count)
+    res_c, _ = clean.serve(reqs)
+    eng = _engine(n_cn, m_mn, nrep, nmp_count)
+    res_f, stats = eng.serve(reqs, failures=[(t_fail, fail_mn)])
+    assert stats.completed == len(reqs)
+    want = {r.rid: r.outputs for r in res_c}
+    for r in res_f:
+        assert np.array_equal(r.outputs, want[r.rid])
+    # fast path only (a late fail time may never be injected; a reinit
+    # restores the full pool): the dead MN must carry no routes
+    if stats.reroutes and not stats.reinits:
+        for (task, tid), dest in eng.routing.routes.items():
+            assert dest != fail_mn
+
+
+# --------------------------------------------------------- property form
+@settings(max_examples=10, deadline=None)
+@given(n_cn=st.integers(1, 3), m_mn=st.integers(2, 5),
+       nrep=st.integers(1, 2), nmp_frac=st.floats(0.0, 1.0))
+def test_routing_invariants_random_configs(n_cn, m_mn, nrep, nmp_frac):
+    _check_routing_invariants(n_cn, m_mn, min(nrep, m_mn),
+                              int(round(nmp_frac * m_mn)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(m_mn=st.integers(2, 4), nmp_frac=st.floats(0.0, 1.0),
+       fail_mn=st.integers(0, 3), t_fail=st.floats(0.0, 0.05))
+def test_failure_reroute_bitwise_random_configs(m_mn, nmp_frac,
+                                                fail_mn, t_fail):
+    _check_failure_preserves_outputs(2, m_mn, 2, int(round(nmp_frac * m_mn)),
+                                     fail_mn % m_mn, t_fail)
+
+
+# ------------------------------------------------- pinned-config fallback
+@pytest.mark.parametrize("n_cn,m_mn,nrep,nmp_count", [
+    (1, 2, 1, 0), (2, 4, 2, 2), (3, 5, 2, 5), (2, 3, 1, 1),
+    (2, 2, 3, 1),      # n_replicas > pool size: clamped, not a crash
+])
+def test_routing_invariants_pinned(n_cn, m_mn, nrep, nmp_count):
+    _check_routing_invariants(n_cn, m_mn, nrep, nmp_count)
+
+
+@pytest.mark.parametrize("m_mn,nmp_count,fail_mn", [
+    (4, 2, 1), (4, 2, 3), (3, 3, 0),
+])
+def test_failure_reroute_bitwise_pinned(m_mn, nmp_count, fail_mn):
+    _check_failure_preserves_outputs(2, m_mn, 2, nmp_count, fail_mn, 0.02)

@@ -84,3 +84,68 @@ def test_greedy_routing_near_balanced(seed, m):
     routing = em.route_greedy(tables, alloc, 1, m)
     if alloc.n_replicas >= 2:
         assert em.imbalance(routing.mn_access) < 1.6
+
+
+# ----------------------------------------------- heterogeneous placement
+def test_allocate_heterogeneous_policy():
+    """Hot tables (above-median access density) place their first
+    replica on DDR, capacity tables on NMP, and with 2 replicas every
+    table spans both classes (type-diverse replication)."""
+    tables = mk_tables(40, seed=3)
+    mn_types = ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]
+    caps = [int(2.5 * sum(t.size_bytes for t in tables) / 4)] * 4
+    alloc = em.allocate_heterogeneous(tables, caps, mn_types, n_replicas=2)
+    nmp = {2, 3}
+    dens = sorted(t.access_bytes / t.size_bytes for t in tables)
+    hot_cut = dens[len(dens) // 2]
+    for t in tables:
+        reps = set(alloc.replicas[t.tid])
+        assert len(reps) == 2
+        # replicas alternate classes: one DDR copy + one NMP copy
+        assert reps & nmp and reps - nmp
+    # the two classes split the capacity roughly according to the policy:
+    # capacity (cold) tables' bytes sit on NMP, hot tables' on DDR
+    hot_tids = {t.tid for t in tables
+                if t.access_bytes / t.size_bytes > hot_cut}
+    assert hot_tids and len(hot_tids) < len(tables)
+
+
+def test_allocate_heterogeneous_uniform_tables_prefer_nmp():
+    """ClusterEngine-style uniform tables are all capacity-class: first
+    replicas land on NMP, second replicas on DDR."""
+    tables = [em.TableInfo(i, 1000, 16, 8.0) for i in range(8)]
+    caps = [10 ** 9] * 4
+    alloc = em.allocate_heterogeneous(
+        tables, caps, ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"],
+        n_replicas=2)
+    for t in tables:
+        reps = set(alloc.replicas[t.tid])
+        assert reps & {2, 3} and reps & {0, 1}
+
+
+def test_allocate_heterogeneous_homogeneous_pool_matches_greedy():
+    tables = mk_tables(60, seed=5)
+    caps = [int(3 * sum(t.size_bytes for t in tables) / 5)] * 5
+    a = em.allocate_heterogeneous(tables, caps, ["ddr_mn"] * 5,
+                                  n_replicas=2)
+    b = em.allocate_greedy(tables, caps, n_replicas=2)
+    assert a.replicas == b.replicas and a.mn_used == b.mn_used
+
+
+def test_route_greedy_weights_steer_to_fast_replicas():
+    """Bandwidth weights shift routed bytes toward NMP replicas while
+    mn_access still reports raw bytes (conservation holds)."""
+    tables = mk_tables(120, seed=7)
+    caps = [int(2.5 * sum(t.size_bytes for t in tables) / 4)] * 4
+    alloc = em.allocate_heterogeneous(
+        tables, caps, ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"],
+        n_replicas=2)
+    flat = em.route_greedy(tables, alloc, 2, 4)
+    steer = em.route_greedy(tables, alloc, 2, 4,
+                            mn_weights=[4.0, 4.0, 1.0, 1.0])
+    total = 2 * sum(t.access_bytes for t in tables)
+    assert np.isclose(sum(flat.mn_access), total, rtol=1e-6)
+    assert np.isclose(sum(steer.mn_access), total, rtol=1e-6)
+    nmp_flat = flat.mn_access[2] + flat.mn_access[3]
+    nmp_steer = steer.mn_access[2] + steer.mn_access[3]
+    assert nmp_steer > nmp_flat

@@ -95,6 +95,68 @@ def test_embedding_bag_fused_flat_shard_offsets():
     assert np.array_equal(out, want)
 
 
+# ------------------------------------------------- near-memory (NMP) bag
+@pytest.mark.parametrize("T,R,D,B,P", [
+    (1, 64, 8, 4, 4), (4, 100, 16, 8, 10), (3, 257, 32, 5, 7),
+    (2, 128, 128, 16, 20),
+    (3, 96, 13, 6, 5),        # D not a multiple of the lane width
+    (2, 50, 8, 5, 1),         # single-slot bags
+])
+def test_embedding_bag_nmp_bitwise_fp32(T, R, D, B, P):
+    """The on-MN pooling kernel (in-kernel bag reduction) must be
+    bitwise-equal to the slot-order reference AND to the fused CN-side
+    bag — ragged bags, empty bags, any D — so a heterogeneous cluster
+    scores identically whichever node type pools a shard."""
+    rng = np.random.RandomState(0)
+    tables = jnp.asarray(rng.randn(T, R, D), jnp.float32)
+    idx = jnp.asarray(_mixed_pooling_idx(rng, R, B, T, P))
+    out_n = np.asarray(ops.embedding_bag_nmp(tables, idx))
+    assert np.array_equal(out_n, np.asarray(ref.embedding_bag_seq_ref(
+        tables, idx)))
+    assert np.array_equal(out_n, np.asarray(ops.embedding_bag_fused(
+        tables, idx)))
+    np.testing.assert_allclose(out_n, np.asarray(
+        ref.embedding_bag_ref(tables, idx)), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_nmp_dtypes(dtype):
+    rng = np.random.RandomState(1)
+    tables = jnp.asarray(rng.randn(4, 64, 16), dtype)
+    idx = jnp.asarray(_mixed_pooling_idx(rng, 64, 6, 4, 8))
+    out_n = np.asarray(ops.embedding_bag_nmp(tables, idx), np.float32)
+    out_r = np.asarray(ref.embedding_bag_ref(tables, idx), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(out_n, out_r, atol=tol, rtol=tol)
+
+
+def test_embedding_bag_nmp_all_padded():
+    tables = jnp.ones((3, 10, 8), jnp.float32)
+    idx = -jnp.ones((4, 3, 5), jnp.int32)
+    out = ops.embedding_bag_nmp(tables, idx)
+    assert out.shape == (4, 3, 8)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_embedding_bag_nmp_flat_shard_offsets():
+    """The NMP shard entry point matches the fused CN-side shard entry
+    point bitwise on the same shuffled table subset."""
+    rng = np.random.RandomState(2)
+    T, R, D, B, P = 5, 40, 16, 6, 6
+    tables = jnp.asarray(rng.randn(T, R, D), jnp.float32)
+    flat = tables.reshape(T * R, D)
+    idx = _mixed_pooling_idx(rng, R, B, T, P)
+    slots = np.array([3, 0, 4], np.int32)
+    offsets = jnp.asarray(slots * R)
+    sub = jnp.asarray(idx[:, slots, :])
+    out_n = np.asarray(ops.embedding_bag_nmp_flat(flat, offsets, sub))
+    out_f = np.asarray(ops.embedding_bag_fused_flat(flat, offsets, sub))
+    want = np.asarray(ref.embedding_bag_seq_ref(
+        tables[jnp.asarray(slots)], sub))
+    assert np.array_equal(out_n, out_f)
+    assert np.array_equal(out_n, want)
+
+
 @pytest.mark.parametrize("B,H,Hkv,S,D,qb,kb", [
     (1, 4, 4, 128, 32, 64, 64),
     (2, 8, 2, 256, 32, 64, 128),

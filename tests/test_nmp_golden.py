@@ -1,0 +1,59 @@
+"""Golden regression for the Fig. 14 NMP headline (issue #2 satellite).
+
+`benchmarks.bench_nmp.run()` reports TCO savings from deploying NMP-DIMM
+memory nodes in the disaggregated pool. The paper's headline band is
+21-43.6%; the memory-bound RM1 must stay in-band for every generation,
+as must the fleet view (RM1+RM2 served together). RM2 alone decays out
+of the band once its DenseNet growth makes generations compute-bound
+(NMP cannot buy back GPU TCO) — its values are pinned as goldens so
+allocator/TCO edits cannot silently drift any of the three series.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import bench_nmp  # noqa: E402
+
+BAND_LO, BAND_HI = bench_nmp.PAPER_BAND
+
+GOLDEN = {
+    "rm1": [0.3899, 0.4085, 0.3897, 0.3985, 0.4193, 0.4135],
+    "rm2": [0.2189, 0.2361, 0.1908, 0.0510, 0.0366, 0.0303],
+    "fleet": [0.3396, 0.3559, 0.3188, 0.2632, 0.2462, 0.2158],
+}
+
+
+@pytest.fixture(scope="module")
+def savings():
+    return bench_nmp.run()
+
+
+def test_rm1_every_generation_in_paper_band(savings):
+    assert len(savings["rm1"]) == 6
+    for v, s in enumerate(savings["rm1"]):
+        assert BAND_LO <= s <= BAND_HI, f"rm1 v{v}: {s:.3f} out of band"
+
+
+def test_fleet_every_generation_in_paper_band(savings):
+    assert len(savings["fleet"]) == 6
+    for v, s in enumerate(savings["fleet"]):
+        assert BAND_LO <= s <= BAND_HI, f"fleet v{v}: {s:.3f} out of band"
+
+
+def test_fleet_savings_decay_with_compute_growth(savings):
+    """RM2's DenseNet growth shifts fleet TCO toward compute, so the
+    NMP saving must decline monotonically after the early generations —
+    the shape of the paper's Fig. 14 narrative."""
+    fleet = savings["fleet"]
+    assert all(a >= b for a, b in zip(fleet[1:], fleet[2:]))
+    assert fleet[-1] < fleet[1]
+
+
+def test_golden_values_pinned(savings):
+    for series, want in GOLDEN.items():
+        np.testing.assert_allclose(savings[series], want, atol=2e-3,
+                                   err_msg=f"{series} savings drifted")
