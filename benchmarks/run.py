@@ -17,6 +17,7 @@ MODULES = [
     ("fig12_design_space", "benchmarks.bench_design_space"),
     ("fig13_tco", "benchmarks.bench_tco"),
     ("fig14_nmp", "benchmarks.bench_nmp"),
+    ("fig11_elastic", "benchmarks.bench_elastic"),
     ("cluster_engine", "benchmarks.bench_cluster"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

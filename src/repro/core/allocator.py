@@ -52,7 +52,9 @@ def allocate(unit: UnitSpec, qps_per_unit: float, power_per_unit: float,
     if unit.scheme == "disagg":
         f_rate = (f_cn * n + f_mn * m) / (n + m)
     else:
-        f_rate = f_cn                       # monolithic follows worst part
+        # a monolithic server is lost when EITHER its compute or its
+        # memory fails — the margin must cover both part failure rates
+        f_rate = f_cn + f_mn
     fail_extra = f_rate * peak_load / qps_per_unit
 
     n_units = [math.ceil((1 + r_margin) * L / qps_per_unit + fail_extra)

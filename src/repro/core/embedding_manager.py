@@ -10,6 +10,12 @@ historical queries). The random baseline (Fig. 7d) picks both uniformly.
 Failure handling (§IV-A): losing an MN re-routes to surviving replicas;
 losing all replicas of any table triggers a re-initialization with backup
 MNs.
+
+Elastic resize (§III, Fig. 2b/11): `allocate_incremental` re-allocates a
+grown/shrunk pool while keeping every surviving placement in place, and
+`plan_migration` diffs two allocations into the minimal set of shard
+copies that must cross the fabric — only tables whose placement changed
+move.
 """
 from __future__ import annotations
 
@@ -168,6 +174,143 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
             used[dest] += t.size_bytes
         replicas[t.tid] = sorted(chosen)
     return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
+
+
+def allocate_incremental(tables: Sequence[TableInfo],
+                         capacities: Sequence[int],
+                         mn_types: Sequence[str],
+                         prev: Allocation,
+                         n_replicas: Optional[int] = None,
+                         exclude: Sequence[int] = ()) -> Allocation:
+    """Minimal-movement re-allocation for an elastic pool resize.
+
+    Every replica that still lands on a live MN of the new pool stays
+    put; only replicas stranded on departed/excluded MNs are re-placed,
+    and tables short of `n_replicas` (a grown pool may afford more)
+    gain copies.  New copies follow the same node-type class policy as
+    `allocate_heterogeneous`: in a mixed pool a table's replica set
+    should keep spanning classes, so a top-up targets the class the
+    surviving copies miss; within the class the most-available MN wins.
+    A homogeneous pool degenerates to plain most-available placement.
+    """
+    m = len(capacities)
+    if len(mn_types) != m:
+        raise ValueError(f"{len(mn_types)} MN types for {m} capacities")
+    dead = set(exclude)
+    live = [i for i in range(m) if i not in dead]
+    if not live:
+        raise ValueError("resize leaves no live MN")
+    nrep = min(n_replicas or prev.n_replicas, len(live))
+    classes = {"nmp": [i for i in live if "nmp" in mn_types[i]],
+               "ddr": [i for i in live if "nmp" not in mn_types[i]]}
+    hetero = bool(classes["nmp"]) and bool(classes["ddr"])
+    used = [0] * m
+    replicas: Dict[int, List[int]] = {}
+    order = sorted(tables, key=lambda t: -t.size_bytes)
+    # first pass: keep every surviving placement (zero movement)
+    for t in order:
+        keep = [i for i in prev.replicas.get(t.tid, ())
+                if i < m and i not in dead][:nrep]
+        for i in keep:
+            used[i] += t.size_bytes
+        replicas[t.tid] = keep
+    # second pass: top up stranded / newly-affordable replicas
+    for t in order:
+        chosen = replicas[t.tid]
+        while len(chosen) < nrep:
+            pool = [i for i in live if i not in chosen]
+            if hetero:
+                have = {("nmp" if "nmp" in mn_types[i] else "ddr")
+                        for i in chosen}
+                missing = [c for c in ("ddr", "nmp") if c not in have]
+                if missing:
+                    cls_pool = [i for c in missing for i in classes[c]
+                                if i not in chosen]
+                    pool = cls_pool or pool
+            if not pool:
+                break                        # nrep > live pool: clamp
+            dest = max(pool, key=lambda i: capacities[i] - used[i])
+            chosen.append(dest)
+            used[dest] += t.size_bytes
+        replicas[t.tid] = sorted(chosen)
+    # third pass: rebalance.  A joining MN starts empty, and routing only
+    # targets replica holders — without movement a grown pool would never
+    # absorb load.  Shift replicas from the fullest to the emptiest MN
+    # (class-preserving, so the placement policy survives) while a single
+    # move still narrows the spread; each move strictly decreases
+    # sum(used^2), so this terminates.
+    groups = [classes["nmp"], classes["ddr"]] if hetero else [live]
+    for group in groups:
+        if len(group) < 2:
+            continue
+        while True:
+            lo = min(group, key=lambda i: (used[i], i))
+            hi = max(group, key=lambda i: (used[i], i))
+            gap = used[hi] - used[lo]
+            cands = [t for t in order
+                     if hi in replicas[t.tid] and lo not in replicas[t.tid]
+                     and t.size_bytes < gap]
+            if not cands:
+                break
+            t = min(cands, key=lambda t: (abs(gap - 2 * t.size_bytes),
+                                          t.tid))
+            replicas[t.tid] = sorted(
+                [i for i in replicas[t.tid] if i != hi] + [lo])
+            used[hi] -= t.size_bytes
+            used[lo] += t.size_bytes
+    return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
+
+
+PARAM_STORE = -1          # migration source when no replica can stream
+
+
+@dataclass
+class MigrationPlan:
+    """Incremental shard migration between two allocations.
+
+    `moves` is one entry per embedding-table copy that must be created:
+    (table id, source MN, destination MN).  The source is a surviving
+    replica when one exists, else a departing replica being drained,
+    else `PARAM_STORE` (re-streamed from the parameter store).  Dropped
+    replicas are free — no bytes cross the fabric to delete a copy.
+    """
+    moves: List[Tuple[int, int, int]]
+    dropped: List[Tuple[int, int]]           # (table id, MN) copies freed
+    bytes_moved: int
+
+    @property
+    def n_moves(self) -> int:
+        return len(self.moves)
+
+
+def plan_migration(old: Allocation, new: Allocation,
+                   tables: Sequence[TableInfo]) -> MigrationPlan:
+    """Diff two allocations into the minimal copy set (elastic resize).
+
+    Only tables whose placement changed appear in the plan; a table
+    whose replica set is identical in both allocations moves nothing.
+    """
+    size = {t.tid: t.size_bytes for t in tables}
+    moves: List[Tuple[int, int, int]] = []
+    dropped: List[Tuple[int, int]] = []
+    bytes_moved = 0
+    for tid, new_reps in new.replicas.items():
+        old_reps = list(old.replicas.get(tid, ()))
+        added = [j for j in new_reps if j not in old_reps]
+        removed = [j for j in old_reps if j not in new_reps]
+        survivors = [j for j in old_reps if j in new_reps]
+        for k, dst in enumerate(added):
+            if survivors:
+                src = survivors[k % len(survivors)]
+            elif removed:                    # drain the departing copy
+                src = removed[k % len(removed)]
+            else:
+                src = PARAM_STORE
+            moves.append((tid, src, dst))
+            bytes_moved += size.get(tid, 0)
+        dropped += [(tid, j) for j in removed]
+    return MigrationPlan(moves=moves, dropped=dropped,
+                         bytes_moved=bytes_moved)
 
 
 def route_random(tables: Sequence[TableInfo], alloc: Allocation,

@@ -98,7 +98,11 @@ class Batcher:
             if rem - grab > 0:
                 kept.append((q, rem - grab))
         self._pending = kept
-        self._pending_since = None if not kept else self._pending_since
+        # a kept remainder is fresh work: restart its flush clock at the
+        # forming instant, or a long-waiting head query would leave the
+        # remainder's deadline already in the past and drain loops would
+        # emit degenerate partial batches instead of waiting max_wait_s
+        self._pending_since = now if kept else None
         b = Batch(self._next_bid, members, now, used, parts)
         self._next_bid += 1
         return b

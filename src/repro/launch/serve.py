@@ -5,6 +5,8 @@
       --cns 2 --mns 4 --fail-mn 1
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --mns 4 --mn-type "2xddr_mn+2xnmp_mn"        # heterogeneous pool
+  PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
+      --cns 3 --mns 6 --elastic              # diurnal resize schedule
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
 """
 from __future__ import annotations
@@ -18,6 +20,7 @@ import numpy as np
 from repro import configs
 from repro.data.queries import QueryDist, dlrm_batch
 from repro.models import registry
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,
                                    parse_mn_types)
 from repro.serving.engine import DLRMServingEngine, LMServingEngine, Request
@@ -43,6 +46,10 @@ def main(argv=None):
                         "('2xddr_mn+2xnmp_mn')")
     p.add_argument("--fail-mn", type=int, default=None,
                    help="kill this MN mid-stream (cluster mode)")
+    p.add_argument("--elastic", action="store_true",
+                   help="follow a diurnal resize schedule mapped onto "
+                        "the request stream (cluster mode): both pools "
+                        "scale down toward the trough and back")
     p.add_argument("--no-kernel", dest="use_kernel", action="store_false",
                    default=True)
     args = p.parse_args(argv)
@@ -70,7 +77,19 @@ def main(argv=None):
                 mn_types=mn_types))
             failures = ([] if args.fail_mn is None
                         else [(0.001 * args.requests / 2, args.fail_mn)])
-            results, stats = engine.serve(reqs, failures=failures)
+            resizes = []
+            if args.elastic:
+                # one diurnal day mapped onto the stream; the CLI pool
+                # sizes are the peak the trough scales down from
+                toy = Autoscaler(AutoscalerConfig(
+                    qps_per_cn=1.0 / args.cns, qps_per_mn=1.0 / args.mns,
+                    min_cn=1, min_mn=min(2, args.mns),
+                    max_cn=args.cns, max_mn=args.mns))
+                resizes = toy.plan(peak_load=0.95,
+                                   duration_s=0.001 * args.requests,
+                                   steps=8)
+            results, stats = engine.serve(reqs, failures=failures,
+                                          resizes=resizes)
             scores = np.concatenate([r.outputs for r in results])
             pool = ",".join(mn_types)
             print(f"[serve] cluster {{{args.cns} CN, {args.mns} MN "
@@ -80,14 +99,19 @@ def main(argv=None):
                   f"p95 {stats.p95 * 1e3:.3f}ms  "
                   f"MN imbalance {stats.imbalance:.3f}  "
                   f"failures={stats.failures} reroutes={stats.reroutes}")
-            mem = sum(stats.mn_access_bytes)
-            gat = sum(stats.mn_gather_bytes)
+            mem = sum(stats.mn_access_bytes) + stats.retired_access_bytes
+            gat = sum(stats.mn_gather_bytes) + stats.retired_gather_bytes
             if any(engine.mn_nmp):
                 print(f"[serve] NMP near-memory pooling: scanned "
                       f"{mem / 1e6:.2f}MB on-node, shipped "
                       f"{gat / 1e6:.2f}MB over the fabric "
                       f"({100 * (1 - gat / max(mem, 1)):.1f}% gather "
                       f"bytes saved vs raw rows)")
+            if args.elastic:
+                print(f"[serve] elastic: {stats.resizes} resizes applied, "
+                      f"{stats.migration_bytes / 1e6:.2f}MB shard "
+                      f"migration, pool now {{{engine.n_cn} CN, "
+                      f"{engine.m_mn} MN}}")
             v = engine.validate_latency_model()
             print(f"[serve] latency model cross-check: engine/analytic "
                   f"= {v['ratio']:.2f} (MN stage {v['mn_stage_ratio']:.2f})")

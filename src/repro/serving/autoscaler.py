@@ -1,0 +1,163 @@
+"""Diurnal autoscaling policy for the elastic ClusterEngine (paper §III,
+Fig. 2b/11).
+
+The paper's provisioning argument: a fixed-proportion deployment pins the
+peak-hour {n CN, m MN} all day, and the diurnal trough (~40% of peak,
+Fig. 2b) turns up to 30% of TCO into idle units (Fig. 11).
+Disaggregation fixes the *shape* of the waste — compute can follow the
+load curve independently, while the memory pool only ever shrinks to its
+capacity floor (the replicated embedding tables must stay resident).  A
+monolithic fleet cannot make that split: every server carries both parts,
+so its floor is the number of servers needed to HOLD the model, no matter
+how low the load falls.
+
+`Autoscaler` turns that policy into timed `ResizeEvent`s that
+``ClusterEngine.serve`` consumes alongside failure events, and into
+per-step {n, m} series for the TCO accounting in
+``benchmarks/bench_elastic.py``.  Per-node service rates come from the
+same analytic `ServingUnitModel` capacities the allocator uses, so the
+elastic plan and the failure-aware allocation (`core/allocator.py`,
+Eq. 1-3) are cross-checkable: a fixed-peak plan's idle unit-hours equal
+``AllocationPlan.idle_units`` x the horizon.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+from repro.configs import counting
+from repro.core import hardware as hw
+from repro.core.allocator import diurnal_load
+from repro.core.hardware import NODE_TYPES
+from repro.core.serving_unit import ServingUnitModel, UnitSpec
+
+
+class ResizeEvent(NamedTuple):
+    """One timed resize; unpacks as the (time_s, n_cn, m_mn) tuple
+    ``ClusterEngine.serve(resizes=...)`` expects."""
+    time_s: float
+    n_cn: int
+    m_mn: int
+
+
+@dataclass(frozen=True)
+class AutoscalerConfig:
+    qps_per_cn: float             # compute-side samples/s one CN sustains
+    qps_per_mn: float             # scan-side samples/s one MN sustains
+    min_cn: int = 1
+    min_mn: int = 1               # capacity floor: replicas stay resident
+    max_cn: Optional[int] = None
+    max_mn: Optional[int] = None
+    headroom: float = hw.LOAD_VARIANCE_R   # R% load-variance margin
+
+
+def _clamp(v: int, lo: int, hi: Optional[int]) -> int:
+    v = max(lo, v)
+    return v if hi is None else min(v, hi)
+
+
+class Autoscaler:
+    """Demand-following sizing: n_cn tracks the load curve, m_mn tracks
+    scan bandwidth demand but never drops below the capacity floor."""
+
+    def __init__(self, cfg: AutoscalerConfig):
+        if cfg.qps_per_cn <= 0 or cfg.qps_per_mn <= 0:
+            raise ValueError("per-node service rates must be positive")
+        self.cfg = cfg
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def for_model(cls, model_cfg, cn_type: str = "cn_1g",
+                  mn_type: str = "ddr_mn", n_replicas: int = 2,
+                  max_cn: Optional[int] = None,
+                  max_mn: Optional[int] = None,
+                  headroom: float = hw.LOAD_VARIANCE_R) -> "Autoscaler":
+        """Derive per-node service rates from the analytic unit model of
+        a {1 CN, 1 MN} cell — the same capacities() the allocator's
+        QPS_{M,S} characterization uses."""
+        um = ServingUnitModel(model_cfg, UnitSpec(1, cn_type, 1, mn_type))
+        caps = um.capacities()
+        qps_cn = min(caps["pre"], caps["dense"],
+                     caps.get("comm", math.inf))
+        qps_mn = caps["sparse"]
+        size = counting.dlrm_size_bytes(model_cfg)
+        mn_cap = NODE_TYPES[mn_type].mem_capacity
+        min_mn = max(1, math.ceil(n_replicas * size / mn_cap))
+        return cls(AutoscalerConfig(
+            qps_per_cn=qps_cn, qps_per_mn=qps_mn, min_cn=1, min_mn=min_mn,
+            max_cn=max_cn, max_mn=max_mn, headroom=headroom))
+
+    @classmethod
+    def monolithic(cls, model_cfg, server_type: str = "so1s_1g",
+                   headroom: float = hw.LOAD_VARIANCE_R) -> "Autoscaler":
+        """Elastic *monolithic* fleet: one node type carries compute AND
+        memory, so the scale-down floor is the server count needed to
+        hold the sharded model — the coupling the paper's Fig. 11
+        charges for.  `units_for` reports (n_servers, 0)."""
+        um = ServingUnitModel(model_cfg,
+                              UnitSpec(1, server_type, scheme="distributed"))
+        qps = min(um.capacities().values())
+        size = counting.dlrm_size_bytes(model_cfg)
+        floor = max(1, math.ceil(size / NODE_TYPES[server_type].mem_capacity))
+        return cls(AutoscalerConfig(
+            qps_per_cn=qps, qps_per_mn=math.inf, min_cn=floor, min_mn=0))
+
+    # ------------------------------------------------------------ policy
+    def units_for(self, load: float) -> Tuple[int, int]:
+        c = self.cfg
+        need = (1.0 + c.headroom) * max(load, 0.0)
+        n = _clamp(math.ceil(need / c.qps_per_cn), c.min_cn, c.max_cn)
+        if math.isinf(c.qps_per_mn):
+            m = _clamp(0, c.min_mn, c.max_mn)
+        else:
+            m = _clamp(math.ceil(need / c.qps_per_mn), c.min_mn, c.max_mn)
+        return n, m
+
+    def series(self, peak_load: float, steps: int = 96
+               ) -> List[Tuple[int, int]]:
+        """Per-step {n_cn, m_mn} over one diurnal day (Fig. 2b)."""
+        return [self.units_for(L) for L in diurnal_load(peak_load, steps)]
+
+    def plan(self, peak_load: float, duration_s: float = 86400.0,
+             steps: int = 96) -> List[ResizeEvent]:
+        """Timed resize events over `duration_s` (the diurnal shape is
+        mapped onto the horizon): one event per step where the required
+        pool size changes, including the t=0 snap to the plan start."""
+        out: List[ResizeEvent] = []
+        prev: Optional[Tuple[int, int]] = None
+        for i, (n, m) in enumerate(self.series(peak_load, steps)):
+            if (n, m) != prev:
+                out.append(ResizeEvent(i * duration_s / steps, n, m))
+                prev = (n, m)
+        return out
+
+
+# ------------------------------------------------------- TCO accounting
+def node_hours(series: Sequence[Tuple[int, int]],
+               duration_s: float = 86400.0) -> Tuple[float, float]:
+    """(CN, MN) node-hours consumed by a per-step {n, m} series."""
+    step_h = duration_s / 3600.0 / len(series)
+    return (sum(n for n, _ in series) * step_h,
+            sum(m for _, m in series) * step_h)
+
+
+def idle_node_hours(series: Sequence[Tuple[int, int]],
+                    duration_s: float = 86400.0) -> Tuple[float, float]:
+    """Node-hours a fixed-peak deployment of the same series would idle:
+    per step, (peak - demanded) for each pool."""
+    n_pk = max(n for n, _ in series)
+    m_pk = max(m for _, m in series)
+    step_h = duration_s / 3600.0 / len(series)
+    return (sum(n_pk - n for n, _ in series) * step_h,
+            sum(m_pk - m for _, m in series) * step_h)
+
+
+def energy_joules(series: Sequence[Tuple[int, int]], cn_type: str,
+                  mn_type: str = "ddr_mn",
+                  duration_s: float = 86400.0) -> float:
+    """Energy of running the series for `duration_s` (constraint (3))."""
+    p_cn = NODE_TYPES[cn_type].power
+    p_mn = NODE_TYPES[mn_type].power if mn_type else 0.0
+    step_s = duration_s / len(series)
+    return sum((n * p_cn + m * p_mn) * step_s for n, m in series)

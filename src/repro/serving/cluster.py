@@ -35,6 +35,19 @@ when a table lost every replica.  ``serve`` accepts timed failure events;
 a failure landing inside a batch's MN stage re-issues that batch's lookups
 on the survivors — no query is ever dropped.
 
+Elasticity (§III, Fig. 2b/11): ``resize(n_cn, m_mn)`` grows or shrinks
+either pool independently while the engine keeps serving.  MN resizes go
+through the incremental migration planner
+(``core.embedding_manager.allocate_incremental`` / ``plan_migration``):
+surviving placements stay put, a departing MN drains its shard copies to
+the survivors, a joining MN is topped up with replicas — and only the
+tables whose placement changed cross the fabric.  ``serve`` consumes
+timed resize events alongside failure events, charging the migration
+bytes to the virtual clock as a background stream that fair-shares the
+gather NIC path with the G_S stage.  Because pooling accumulates slots
+in the same ascending order on every node, scores before, during, and
+after any resize are bitwise-identical to a fixed-pool run.
+
 Latency accounting is wall-clock-free: a virtual clock driven by the
 analytic unit model's stage times (G_P, scatter, G_S + gather from
 *measured* per-MN access/gather bytes at *per-node-type* bandwidths,
@@ -58,6 +71,14 @@ from repro.core.hardware import NODE_TYPES
 from repro.core.scheduler import Batch, Batcher, Query
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
 from repro.serving.engine import Request, Result
+
+
+def _fit(arr: np.ndarray, n: int, fill: float = 0.0) -> np.ndarray:
+    """Resize a per-node accounting/clock array to `n` entries: growth
+    appends `fill`, shrink drops the departing tail."""
+    if len(arr) >= n:
+        return arr[:n].copy()
+    return np.concatenate([arr, np.full(n - len(arr), fill)])
 
 
 def _validate_mn_types(types: Sequence[str], m_mn: int) -> List[str]:
@@ -111,7 +132,7 @@ class ClusterConfig:
 @dataclass
 class ClusterStats:
     completed: int
-    mean_latency: float
+    mean_latency: float           # nan when no query completed
     p50: float
     p95: float
     failures: int
@@ -121,6 +142,11 @@ class ClusterStats:
     mn_gather_bytes: List[float]  # bytes each MN shipped to CNs (fabric)
     mn_types: List[str]
     imbalance: float              # max/mean access over surviving MNs
+    recoveries: int = 0           # MNs brought back via recover_mn
+    resizes: int = 0              # elastic resize events applied
+    migration_bytes: float = 0.0  # shard bytes moved by resizes
+    retired_access_bytes: float = 0.0   # departed (shrunk-away) MNs' scans
+    retired_gather_bytes: float = 0.0   # ... and their shipped bytes
 
 
 class ClusterEngine:
@@ -137,29 +163,28 @@ class ClusterEngine:
                                   r.embed_dim)
         self.tables = [em.TableInfo(t, self.R, self.D, float(r.avg_pooling))
                        for t in range(self.T)]
+        # live pool sizes — cfg keeps the initial provisioning, these move
+        # with resize()
+        self.n_cn = self.cfg.n_cn
+        self.m_mn = self.cfg.m_mn
         # heterogeneous pool: one node type per MN (all cfg.mn_type when
         # no per-MN override is given)
         self.mn_types = self.cfg.resolved_mn_types()
         self.mn_nmp = [NODE_TYPES[t].nmp for t in self.mn_types]
         self.mn_bw = [NODE_TYPES[t].mem_bw for t in self.mn_types]
         self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
-        # MN capacity sized so the requested replication factor fits, with
-        # one table of slack per MN for greedy placement skew
-        total = sum(t.size_bytes for t in self.tables)
-        cap = (math.ceil(self.cfg.n_replicas * total / self.cfg.m_mn)
-               + self.tables[0].size_bytes)
-        self.capacities = [cap] * self.cfg.m_mn
+        self.capacities = self._pool_capacities(self.m_mn)
         self.alloc = em.allocate_heterogeneous(
             self.tables, self.capacities, self.mn_types,
             n_replicas=self.cfg.n_replicas)
         self.dead: Set[int] = set()
         self.routing = em.route_greedy(self.tables, self.alloc,
-                                       self.cfg.n_cn, self.cfg.m_mn,
+                                       self.n_cn, self.m_mn,
                                        mn_weights=self._route_w)
         self._build_shards()
         self.unit_model = unit_model or ServingUnitModel(
-            model.cfg, UnitSpec(self.cfg.n_cn, self.cfg.cn_type,
-                                self.cfg.m_mn, self.cfg.mn_type,
+            model.cfg, UnitSpec(self.n_cn, self.cfg.cn_type,
+                                self.m_mn, self.cfg.mn_type,
                                 mn_types=tuple(self.mn_types)))
         self._dense_step = jax.jit(
             lambda p, d, pooled: jax.nn.sigmoid(
@@ -168,11 +193,27 @@ class ClusterEngine:
         self.failures = 0
         self.reroutes = 0
         self.reinits = 0
-        self.mn_access_bytes = np.zeros(self.cfg.m_mn)
-        self.mn_gather_bytes = np.zeros(self.cfg.m_mn)
-        self.mn_stage_s = np.zeros(self.cfg.m_mn)   # modeled G_S per MN
+        self.recoveries = 0
+        self.resizes = 0
+        self.migration_bytes = 0.0
+        self.mn_access_bytes = np.zeros(self.m_mn)
+        self.mn_gather_bytes = np.zeros(self.m_mn)
+        self.mn_stage_s = np.zeros(self.m_mn)       # modeled G_S per MN
+        self.retired_access_bytes = 0.0             # departed MNs' totals
+        self.retired_gather_bytes = 0.0
         self._mn_stage_max_sum = 0.0                # per-batch gating stage
         self._n_batches = 0
+
+    def _pool_capacities(self, m_mn: int) -> List[int]:
+        """Per-MN shard budget at pool size `m_mn`: the requested
+        replication factor fits, with one table of slack per MN for
+        greedy placement skew.  The elastic pool re-provisions this
+        budget at every size, so a shrink's survivors can always absorb
+        the departing shards."""
+        total = sum(t.size_bytes for t in self.tables)
+        cap = (math.ceil(self.cfg.n_replicas * total / m_mn)
+               + self.tables[0].size_bytes)
+        return [cap] * m_mn
 
     # ------------------------------------------------------------- shards
     def _build_shards(self) -> None:
@@ -182,7 +223,7 @@ class ClusterEngine:
         self._shard_tids: List[List[int]] = []
         self._shard_slot: List[Dict[int, int]] = []
         self._shard_flat: List[jax.Array] = []
-        for j in range(self.cfg.m_mn):
+        for j in range(self.m_mn):
             tids = sorted(t for t, reps in self.alloc.replicas.items()
                           if j in reps)
             self._shard_tids.append(tids)
@@ -198,8 +239,8 @@ class ClusterEngine:
     def fail_mn(self, j: int) -> None:
         """Kill MN `j`: re-route to surviving replicas, or re-initialize
         the shard allocation if some table lost its last replica."""
-        if not 0 <= j < self.cfg.m_mn:
-            raise ValueError(f"MN id {j} outside pool of {self.cfg.m_mn}")
+        if not 0 <= j < self.m_mn:
+            raise ValueError(f"MN id {j} outside pool of {self.m_mn}")
         if j in self.dead:
             return
         self.dead.add(j)
@@ -217,24 +258,100 @@ class ClusterEngine:
                 self.tables, self.capacities, self.mn_types,
                 n_replicas=self.cfg.n_replicas)
             self.routing = em.route_greedy(self.tables, self.alloc,
-                                           self.cfg.n_cn, self.cfg.m_mn,
+                                           self.n_cn, self.m_mn,
                                            mn_weights=self._route_w)
             self._build_shards()
         else:
             self.reroutes += 1
             self.routing = em.route_greedy(self.tables, self.alloc,
-                                           self.cfg.n_cn, self.cfg.m_mn,
+                                           self.n_cn, self.m_mn,
                                            exclude=sorted(self.dead),
                                            mn_weights=self._route_w)
 
     def recover_mn(self, j: int) -> None:
+        """Bring a failed MN back: its shard is still materialized (or was
+        rebuilt by a reinit), so recovery is a routing rebuild only."""
+        if not 0 <= j < self.m_mn:
+            raise ValueError(f"MN id {j} outside pool of {self.m_mn}")
         if j not in self.dead:
             return
         self.dead.discard(j)
+        self.recoveries += 1
         self.routing = em.route_greedy(self.tables, self.alloc,
-                                       self.cfg.n_cn, self.cfg.m_mn,
+                                       self.n_cn, self.m_mn,
                                        exclude=sorted(self.dead),
                                        mn_weights=self._route_w)
+
+    # --------------------------------------------------------- elasticity
+    def resize(self, n_cn: Optional[int] = None, m_mn: Optional[int] = None,
+               mn_type: Optional[str] = None) -> em.MigrationPlan:
+        """Grow/shrink either pool independently (paper §III, Fig. 2b/11).
+
+        MN grow: the joining MNs (of `mn_type`, default the config's pool
+        type) start empty and the incremental allocator tops replicas up
+        onto them.  MN shrink: the highest-numbered MNs depart, draining
+        their shard copies to the survivors first (the migration plan's
+        moves) so no table ever loses availability.  CN resize holds no
+        embedding state — it only rebalances the routing rows across the
+        new task count.  Scores are bitwise-invariant across any resize:
+        placement decides WHERE a table pools, never the slot
+        accumulation order.
+
+        Returns the migration plan; `serve` charges its bytes to the
+        virtual clock as a background stream contending with the G_S
+        gather path.
+        """
+        new_n = self.n_cn if n_cn is None else int(n_cn)
+        new_m = self.m_mn if m_mn is None else int(m_mn)
+        if new_n < 1 or new_m < 1:
+            raise ValueError(
+                f"cannot resize to {{n_cn={new_n}, m_mn={new_m}}}")
+        if (new_n, new_m) == (self.n_cn, self.m_mn):
+            return em.MigrationPlan(moves=[], dropped=[], bytes_moved=0)
+        plan = em.MigrationPlan(moves=[], dropped=[], bytes_moved=0)
+        if new_m != self.m_mn:
+            if new_m > self.m_mn:
+                add = mn_type or self.cfg.mn_type
+                new_types = self.mn_types + [add] * (new_m - self.m_mn)
+            else:
+                new_types = self.mn_types[:new_m]
+            new_types = _validate_mn_types(new_types, new_m)
+            caps = self._pool_capacities(new_m)
+            dead = {j for j in self.dead if j < new_m}
+            new_alloc = em.allocate_incremental(
+                self.tables, caps, new_types, prev=self.alloc,
+                n_replicas=self.cfg.n_replicas, exclude=sorted(dead))
+            plan = em.plan_migration(self.alloc, new_alloc, self.tables)
+            if new_m < self.m_mn:
+                # departing MNs retire their accumulated byte counters
+                self.retired_access_bytes += float(
+                    self.mn_access_bytes[new_m:].sum())
+                self.retired_gather_bytes += float(
+                    self.mn_gather_bytes[new_m:].sum())
+            self.mn_access_bytes = _fit(self.mn_access_bytes, new_m)
+            self.mn_gather_bytes = _fit(self.mn_gather_bytes, new_m)
+            self.mn_stage_s = _fit(self.mn_stage_s, new_m)
+            self.alloc = new_alloc
+            self.mn_types = new_types
+            self.mn_nmp = [NODE_TYPES[t].nmp for t in new_types]
+            self.mn_bw = [NODE_TYPES[t].mem_bw for t in new_types]
+            self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
+            self.capacities = caps
+            self.dead = dead
+            self.m_mn = new_m
+            self._build_shards()
+        self.n_cn = new_n
+        self.routing = em.route_greedy(self.tables, self.alloc,
+                                       self.n_cn, self.m_mn,
+                                       exclude=sorted(self.dead),
+                                       mn_weights=self._route_w)
+        self.unit_model = ServingUnitModel(
+            self.model.cfg, UnitSpec(self.n_cn, self.cfg.cn_type,
+                                     self.m_mn, self.cfg.mn_type,
+                                     mn_types=tuple(self.mn_types)))
+        self.resizes += 1
+        self.migration_bytes += plan.bytes_moved
+        return plan
 
     # ------------------------------------------------------ real compute
     def _mn_pool(self, j: int, tids: Sequence[int],
@@ -268,11 +385,11 @@ class ClusterEngine:
         rows cross the fabric); an NMP MN scans the same rows locally
         but ships only ``valid rows x T_j x D`` pooled bytes."""
         shards = em.shard_assignment(self.alloc, self.routing, self.T,
-                                     self.cfg.m_mn, task)
+                                     self.m_mn, task)
         B = dense.shape[0]
         pooled = np.zeros((B, self.T, self.D), np.float32)
-        mem_j = np.zeros(self.cfg.m_mn)
-        gat_j = np.zeros(self.cfg.m_mn)
+        mem_j = np.zeros(self.m_mn)
+        gat_j = np.zeros(self.m_mn)
         for j, tids in enumerate(shards):
             if not tids:
                 continue
@@ -293,9 +410,15 @@ class ClusterEngine:
 
     # ---------------------------------------------------------- serving
     def serve(self, requests: List[Request],
-              failures: Sequence[Tuple[float, int]] = ()
+              failures: Sequence[Tuple[float, int]] = (),
+              resizes: Sequence[Tuple[float, int, int]] = ()
               ) -> Tuple[List[Result], ClusterStats]:
-        """Serve a request stream; `failures` is [(time_s, mn_id), ...].
+        """Serve a request stream; `failures` is [(time_s, mn_id), ...]
+        and `resizes` is [(time_s, n_cn, m_mn), ...] — timed elastic
+        resize events (e.g. from ``serving.autoscaler``), applied in
+        global time order with the failures at batch boundaries on the
+        virtual clock.  A resize's migration bytes stream in the
+        background and contend with the G_S gather path.
 
         Execution is real JAX; time is a virtual clock advanced with the
         analytic stage model, so latencies are deterministic and
@@ -303,6 +426,13 @@ class ClusterEngine:
         cfg = self.cfg
         batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
         fail_q = sorted(failures)
+        for _, j in fail_q:
+            # ids refer to the pool at serve start; an id only becomes a
+            # no-op if a scheduled shrink retires that MN before it fires
+            if not 0 <= j < self.m_mn:
+                raise ValueError(f"failure event targets MN {j} outside "
+                                 f"the serving pool of {self.m_mn}")
+        resize_q = sorted(resizes)
         payload = {r.rid: r.payload for r in requests}
         arrival = {r.rid: r.arrival for r in requests}
         row_cursor: Dict[int, int] = {r.rid: 0 for r in requests}
@@ -313,9 +443,10 @@ class ClusterEngine:
 
         st = self.unit_model.stage_times(cfg.batch_size)
         mn_bw = np.asarray(self.mn_bw)
-        cn_pre_free = np.zeros(cfg.n_cn)
-        cn_gpu_free = np.zeros(cfg.n_cn)
+        cn_pre_free = np.zeros(self.n_cn)
+        cn_gpu_free = np.zeros(self.n_cn)
         mn_barrier = 0.0              # sequential lock-step over the pool
+        mig_end = 0.0                 # background migration busy-until
 
         def mn_stage(mem_j: np.ndarray, gat_j: np.ndarray
                      ) -> Tuple[np.ndarray, float]:
@@ -329,12 +460,35 @@ class ClusterEngine:
             return stage_j, gate
 
         def inject(upto: float) -> None:
-            while fail_q and fail_q[0][0] <= upto:
-                _, j = fail_q.pop(0)
-                self.fail_mn(j)
+            """Apply failure and resize events in global time order.
+            Resizes take effect at batch boundaries; a resize stamped
+            inside a batch's MN stage applies before the next batch."""
+            nonlocal st, mn_bw, cn_pre_free, cn_gpu_free, mig_end
+            while True:
+                t_f = fail_q[0][0] if fail_q else math.inf
+                t_r = resize_q[0][0] if resize_q else math.inf
+                if min(t_f, t_r) > upto:
+                    return
+                if t_f <= t_r:
+                    _, j = fail_q.pop(0)
+                    if j < self.m_mn:   # an MN that shrank away can't fail
+                        self.fail_mn(j)
+                    continue
+                t, nn, mm = resize_q.pop(0)
+                plan = self.resize(nn, mm)
+                st = self.unit_model.stage_times(cfg.batch_size)
+                mn_bw = np.asarray(self.mn_bw)
+                # joining CNs are idle from the resize instant; a
+                # departing CN's queue retires with it (batches are
+                # placed by argmin over the live pool)
+                cn_pre_free = _fit(cn_pre_free, self.n_cn, t)
+                cn_gpu_free = _fit(cn_gpu_free, self.n_cn, t)
+                # migration bytes stream over the fabric in the
+                # background, starting when the resize fires
+                mig_end = max(mig_end, t) + plan.bytes_moved / hw.NIC_BW
 
         def run_batch(b: Batch, now: float) -> None:
-            nonlocal mn_barrier
+            nonlocal mn_barrier, mig_end
             # assemble real rows from each member query's payload
             dense_rows, idx_rows = [], []
             for q, nrows in b.parts:
@@ -360,6 +514,15 @@ class ClusterEngine:
             # MNs that died during G_P/scatter are gone before this batch's
             # MN stage begins: re-route first, then execute
             inject(mn_start)
+            # a CN shrink landing inside the G_P/scatter window may have
+            # retired the chosen CN: hand the batch off to a survivor and
+            # redo its pre stage there
+            while task >= len(cn_pre_free):
+                task = int(np.argmin(cn_pre_free))
+                pre_done = max(now, cn_pre_free[task]) + st.t_pre * scale
+                cn_pre_free[task] = pre_done
+                mn_start = max(pre_done + st.t_comm_in * scale, mn_barrier)
+                inject(mn_start)
             scores, mem_j, gat_j = self._execute(task, dense, idx)
             stage_j, t_mn = mn_stage(mem_j, gat_j)    # slowest MN + gather
 
@@ -367,12 +530,27 @@ class ClusterEngine:
             # in flight: rebuild routing, re-issue on the survivors
             while (fail_q and mn_start < fail_q[0][0] <= mn_start + t_mn):
                 t_fail, j = fail_q.pop(0)
+                if j >= self.m_mn:      # departed via an earlier shrink
+                    continue
                 hit = mem_j[j] > 0
                 self.fail_mn(j)
                 if hit:
+                    # the aborted scan's traffic was already on the wire
+                    # and the bus — charge the wasted first pass before
+                    # re-issuing on the survivors
+                    self.mn_access_bytes += mem_j
+                    self.mn_gather_bytes += gat_j
+                    self.mn_stage_s += stage_j
                     scores, mem_j, gat_j = self._execute(task, dense, idx)
                     stage_j, t_mn = mn_stage(mem_j, gat_j)
                     mn_start = t_fail + cfg.mn_recovery_s
+            # an in-flight shard migration fair-shares the gather NIC
+            # path with this batch: each stream extends by the other's
+            # demand for the overlap
+            if mn_start < mig_end and gat_j.sum() > 0:
+                extra = float(gat_j.sum()) / hw.NIC_BW
+                t_mn += extra
+                mig_end += extra
             mn_done = mn_start + t_mn
             mn_barrier = mn_done
             self.mn_access_bytes += mem_j
@@ -417,14 +595,20 @@ class ClusterEngine:
                 run_batch(b, req.arrival)
         drain_due(None)
 
-        lats = np.asarray(latencies) if latencies else np.zeros(1)
+        if latencies:
+            lats = np.asarray(latencies)
+            mean_lat = float(lats.mean())
+            p50 = float(np.percentile(lats, 50))
+            p95 = float(np.percentile(lats, 95))
+        else:       # nothing completed: report nan, not a fabricated 0.0
+            mean_lat = p50 = p95 = float("nan")
         live = [a for j, a in enumerate(self.mn_access_bytes)
                 if j not in self.dead]
         stats = ClusterStats(
             completed=len(results),
-            mean_latency=float(lats.mean()),
-            p50=float(np.percentile(lats, 50)),
-            p95=float(np.percentile(lats, 95)),
+            mean_latency=mean_lat,
+            p50=p50,
+            p95=p95,
             failures=self.failures,
             reroutes=self.reroutes,
             reinits=self.reinits,
@@ -432,6 +616,11 @@ class ClusterEngine:
             mn_gather_bytes=list(self.mn_gather_bytes),
             mn_types=list(self.mn_types),
             imbalance=em.imbalance(live),
+            recoveries=self.recoveries,
+            resizes=self.resizes,
+            migration_bytes=self.migration_bytes,
+            retired_access_bytes=self.retired_access_bytes,
+            retired_gather_bytes=self.retired_gather_bytes,
         )
         results.sort(key=lambda r: r.rid)
         return results, stats

@@ -35,6 +35,19 @@ def test_mn_failure_rate_lowers_overprovision():
     assert pd.failure_units < pm.failure_units
 
 
+def test_monolithic_margin_counts_both_part_failures():
+    """Eq. 2 for a monolithic server: it is lost when EITHER its compute
+    or its memory fails, so the margin rate is f_cn + f_mn — not f_cn."""
+    mono = UnitSpec(8, "so1s_1g", scheme="distributed")
+    p = allocator.allocate(mono, 1000.0, mono.power(), 50_000.0)
+    want = (hw.FAIL_CN + hw.FAIL_MN) * 50_000.0 / 1000.0
+    assert p.failure_units == pytest.approx(want)
+    # and the margin responds to the memory failure rate
+    worse = allocator.allocate(mono, 1000.0, mono.power(), 50_000.0,
+                               f_mn=0.1)
+    assert worse.failure_units > p.failure_units
+
+
 def test_capacity_model_matches_paper_claims():
     """Fig. 4/12/14 structural claims."""
     m = rm1.generation(0)

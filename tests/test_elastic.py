@@ -1,0 +1,429 @@
+"""Elastic CN/MN autoscaling (issue #3): resize bitwise parity, the
+incremental migration planner, the diurnal autoscaler policy, and the
+ingress/accounting bugfix sweep that rode along.
+
+The tentpole invariant is bitwise: scores before, during, and after any
+resize — grow or shrink, CN-only / MN-only / both — must equal a
+fixed-pool run on the same request stream.  Placement decides WHERE a
+table pools, never the slot accumulation order.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import rm1
+from repro.core import embedding_manager as em
+from repro.core.scheduler import Batcher, Query
+from repro.data.queries import QueryDist, dlrm_batch
+from repro.models.dlrm import DLRMModel
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      ResizeEvent, energy_joules,
+                                      idle_node_hours, node_hours)
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-elastic",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+MODEL = DLRMModel(CFG)
+PARAMS = MODEL.init(0)
+
+
+def _requests(n, seed=0):
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=4.0, max_size=12).sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.004 * i))
+    return reqs
+
+
+def _engine(n_cn=2, m_mn=4, nrep=2, **kw):
+    return ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=nrep, **kw))
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    reqs = _requests(12)
+    eng = _engine()
+    res, _ = eng.serve(reqs)
+    return reqs, {r.rid: r.outputs for r in res}
+
+
+# ------------------------------------------------- batcher deadline fix
+def test_split_remainder_waits_full_window():
+    """A split query's remainder is fresh work: its flush deadline must
+    restart at the forming instant, not inherit the stale head-of-queue
+    clock (which would already be in the past)."""
+    b = Batcher(batch_size=16, max_wait_s=0.01)
+    assert b.offer(Query(0, 0.0, 4), 0.0) == []
+    out = b.offer(Query(1, 0.05, 20), 0.05)      # 4+20: one full batch
+    assert len(out) == 1 and out[0].size == 16
+    # remainder of 8 rows waits its own full window from t=0.05
+    assert b.next_deadline() == pytest.approx(0.06)
+    assert b.next_deadline() > 0.05              # NOT the stale 0.01
+    assert b.flush(0.055) == []                  # not due yet
+    flushed = b.flush(b.next_deadline())
+    assert [bt.size for bt in flushed] == [8]
+
+
+def test_batcher_empty_after_exact_fill_has_no_deadline():
+    b = Batcher(batch_size=8, max_wait_s=0.01)
+    out = b.offer(Query(0, 0.0, 8), 0.0)
+    assert len(out) == 1 and b.next_deadline() is None
+
+
+# --------------------------------------------- incremental alloc + plan
+def _tables(n=6, rows=64, dim=8):
+    return [em.TableInfo(t, rows, dim, 4.0) for t in range(n)]
+
+
+def test_plan_migration_moves_only_changed_tables():
+    tabs = _tables()
+    old = em.Allocation(replicas={0: [0, 1], 1: [1, 2], 2: [0, 2]},
+                        mn_used=[0] * 3, n_replicas=2)
+    new = em.Allocation(replicas={0: [0, 1], 1: [1, 3], 2: [0, 2]},
+                        mn_used=[0] * 4, n_replicas=2)
+    plan = em.plan_migration(old, new, tabs)
+    assert plan.moves == [(1, 1, 3)]             # src = surviving replica
+    assert plan.dropped == [(1, 2)]
+    assert plan.bytes_moved == tabs[1].size_bytes
+
+
+def test_plan_migration_drains_departing_copy():
+    tabs = _tables(1)
+    old = em.Allocation(replicas={0: [2]}, mn_used=[0] * 3, n_replicas=1)
+    new = em.Allocation(replicas={0: [0]}, mn_used=[0] * 3, n_replicas=1)
+    plan = em.plan_migration(old, new, tabs)
+    assert plan.moves == [(0, 2, 0)]             # drained, not re-streamed
+    assert plan.bytes_moved == tabs[0].size_bytes
+
+
+def test_allocate_incremental_identity_when_pool_unchanged():
+    tabs = _tables()
+    caps = [10 * t.size_bytes for t in tabs][:4]
+    prev = em.allocate_greedy(tabs, caps, n_replicas=2)
+    new = em.allocate_incremental(tabs, caps, ["ddr_mn"] * 4, prev=prev,
+                                  n_replicas=2)
+    assert new.replicas == prev.replicas
+    assert em.plan_migration(prev, new, tabs).n_moves == 0
+
+
+def test_allocate_incremental_grow_rebalances_onto_new_mn():
+    """Routing only targets replica holders, so a grown pool must
+    receive shard copies — and the spread stays balanced."""
+    tabs = _tables()
+    caps4 = [10 * t.size_bytes for t in tabs][:4]
+    prev = em.allocate_greedy(tabs, caps4, n_replicas=2)
+    caps6 = caps4 + caps4[:2]
+    new = em.allocate_incremental(tabs, caps6, ["ddr_mn"] * 6, prev=prev,
+                                  n_replicas=2)
+    plan = em.plan_migration(prev, new, tabs)
+    assert plan.n_moves > 0 and plan.bytes_moved > 0
+    assert all(u > 0 for u in new.mn_used)       # joiners absorbed load
+    assert max(new.mn_used) - min(new.mn_used) <= tabs[0].size_bytes
+
+
+def test_allocate_incremental_shrink_drains_to_survivors():
+    tabs = _tables()
+    caps4 = [10 * t.size_bytes for t in tabs][:4]
+    prev = em.allocate_greedy(tabs, caps4, n_replicas=2)
+    new = em.allocate_incremental(tabs, caps4[:2], ["ddr_mn"] * 2,
+                                  prev=prev, n_replicas=2)
+    # every table keeps 2 distinct replicas inside the shrunk pool
+    for tid, reps in new.replicas.items():
+        assert len(set(reps)) == 2 and all(j < 2 for j in reps)
+    plan = em.plan_migration(prev, new, tabs)
+    stranded = sum(1 for t in tabs for j in prev.replicas[t.tid] if j >= 2)
+    assert plan.n_moves == stranded
+
+
+def test_allocate_incremental_respects_exclude():
+    tabs = _tables()
+    caps = [10 * t.size_bytes for t in tabs][:4]
+    prev = em.allocate_greedy(tabs, caps, n_replicas=2)
+    new = em.allocate_incremental(tabs, caps, ["ddr_mn"] * 4, prev=prev,
+                                  n_replicas=2, exclude=[1])
+    for reps in new.replicas.values():
+        assert 1 not in reps
+
+
+# -------------------------------------------------- resize bitwise parity
+def _assert_bitwise(reqs, want, resizes, n_cn=2, m_mn=4, **kw):
+    eng = _engine(n_cn, m_mn, **kw)
+    res, stats = eng.serve(reqs, resizes=resizes)
+    assert stats.completed == len(reqs)
+    for r in res:
+        assert np.array_equal(r.outputs, want[r.rid])
+    return eng, stats
+
+
+@pytest.mark.parametrize("resizes", [
+    [(0.015, 3, 4)],                     # CN-only grow
+    [(0.015, 1, 4)],                     # CN-only shrink
+    [(0.015, 2, 6)],                     # MN-only grow
+    [(0.015, 2, 2)],                     # MN-only shrink
+    [(0.015, 4, 7)],                     # both grow
+    [(0.015, 1, 2)],                     # both shrink
+    [(0.01, 1, 2), (0.03, 3, 6)],        # shrink then grow past start
+    [(0.0, 1, 2)],                       # resize before the first batch
+])
+def test_resize_bitwise_pinned(baseline, resizes):
+    reqs, want = baseline
+    eng, stats = _assert_bitwise(reqs, want, resizes)
+    assert stats.resizes == len(resizes)
+    assert (eng.n_cn, eng.m_mn) == resizes[-1][1:]
+    # routing covers every task of the final CN pool, no departed MN
+    for task in range(eng.n_cn):
+        for tid in range(CFG.dlrm.num_tables):
+            assert eng.routing.routes[(task, tid)] < eng.m_mn
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_cn=st.integers(1, 4), m_mn=st.integers(1, 7),
+       t_frac=st.floats(0.0, 1.0))
+def test_resize_bitwise_random_configs(baseline, n_cn, m_mn, t_frac):
+    reqs, want = baseline
+    span = 0.004 * len(reqs)
+    _assert_bitwise(reqs, want, [(t_frac * span, n_cn, m_mn)])
+
+
+def test_resize_with_failure_bitwise(baseline):
+    """A resize and an MN failure on the same stream: still bitwise."""
+    reqs, want = baseline
+    eng, stats = _assert_bitwise(reqs, want, [(0.02, 3, 5)])
+    eng2 = _engine()
+    res2, st2 = eng2.serve(reqs, failures=[(0.01, 1)],
+                           resizes=[(0.02, 3, 5)])
+    assert st2.completed == len(reqs)
+    for r in res2:
+        assert np.array_equal(r.outputs, want[r.rid])
+    assert st2.failures == 1 and st2.resizes == 1
+
+
+def test_cn_shrink_inside_pre_window_hands_off():
+    """A CN shrink whose timestamp lands inside a batch's G_P/scatter
+    window must hand the batch off to a surviving CN — not execute with
+    a stale task index (routing KeyError).  Full-size queries at t=0
+    form batches immediately, so a sub-microsecond grid of resize
+    instants sweeps through the stage windows deterministically."""
+    rng = np.random.RandomState(11)
+    reqs = []
+    for i in range(3):
+        b = dlrm_batch(CFG, 8, rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]}, 8, 0.0))
+    clean = _engine(3, 4)
+    res_c, _ = clean.serve(reqs)
+    want = {r.rid: r.outputs for r in res_c}
+    for k in range(20):
+        t = 1e-8 + k * 2.5e-8
+        eng = _engine(3, 4)
+        res, stats = eng.serve(reqs, resizes=[(t, 1, 4)])
+        assert stats.completed == len(reqs), f"t={t}"
+        for r in res:
+            assert np.array_equal(r.outputs, want[r.rid])
+
+
+def test_invalid_failure_event_rejected_upfront():
+    """A failure id outside the pool at serve start is a caller error,
+    not a silent no-op (a typo'd --fail-mn must not fake a clean run)."""
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.serve(_requests(4, seed=9), failures=[(0.01, 99)])
+    with pytest.raises(ValueError):
+        eng.serve(_requests(4, seed=9), failures=[(0.01, -1)])
+
+
+def test_failure_event_for_departed_mn_is_dropped(baseline):
+    """A timed failure aimed at an MN that already shrank out of the
+    pool is a no-op — the machine isn't there to fail."""
+    reqs, want = baseline
+    eng = _engine()
+    res, stats = eng.serve(reqs, failures=[(0.03, 3)],
+                           resizes=[(0.01, 2, 2)])
+    assert stats.completed == len(reqs)
+    assert stats.failures == 0 and stats.resizes == 1
+    for r in res:
+        assert np.array_equal(r.outputs, want[r.rid])
+
+
+def test_resize_migration_accounting(baseline):
+    reqs, want = baseline
+    # MN shrink must drain shards: bytes move and are counted, and the
+    # departed MNs' accumulated traffic is retired, not vanished — the
+    # grand total still accounts every scanned byte
+    _, st_shrink = _assert_bitwise(reqs, want, [(0.015, 2, 2)])
+    assert st_shrink.migration_bytes > 0
+    assert st_shrink.retired_access_bytes > 0
+    _, st_fixed = _assert_bitwise(reqs, want, [])
+    assert (sum(st_shrink.mn_access_bytes) + st_shrink.retired_access_bytes
+            == pytest.approx(sum(st_fixed.mn_access_bytes)))
+    # CN-only resize holds no embedding state: nothing migrates
+    _, st_cn = _assert_bitwise(reqs, want, [(0.015, 3, 4)])
+    assert st_cn.migration_bytes == 0
+
+
+def test_resize_mid_stream_latency_model_still_valid(baseline):
+    reqs, _ = baseline
+    eng, _ = _assert_bitwise(reqs, {r: o for r, o in baseline[1].items()},
+                             [(0.02, 3, 6)])
+    v = eng.validate_latency_model()
+    assert 0.1 < v["ratio"] < 10.0
+
+
+def test_resize_hetero_pool_preserves_class_span(baseline):
+    reqs, want = baseline
+    mix = ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]
+    eng = _engine(mn_types=mix)
+    plan = eng.resize(m_mn=6, mn_type="nmp_mn")
+    assert plan.bytes_moved > 0
+    assert eng.mn_types == mix + ["nmp_mn", "nmp_mn"]
+    for tid, reps in eng.alloc.replicas.items():
+        cls = {("nmp" if eng.mn_nmp[j] else "ddr") for j in reps}
+        assert cls == {"ddr", "nmp"}
+    res, _ = eng.serve(reqs)
+    for r in res:
+        assert np.array_equal(r.outputs, want[r.rid])
+
+
+def test_resize_validation():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.resize(n_cn=0)
+    with pytest.raises(ValueError):
+        eng.resize(m_mn=-1)
+    plan = eng.resize()                          # no-op
+    assert plan.n_moves == 0 and eng.resizes == 0
+
+
+# ------------------------------------- recover_mn + empty-stream stats
+def test_recover_mn_bounds_and_counter():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.recover_mn(99)
+    with pytest.raises(ValueError):
+        eng.recover_mn(-1)
+    eng.fail_mn(1)
+    eng.recover_mn(1)
+    assert eng.recoveries == 1 and not eng.dead
+    eng.recover_mn(1)                            # idempotent
+    assert eng.recoveries == 1
+    for (task, tid), dest in eng.routing.routes.items():
+        assert 0 <= dest < eng.m_mn
+    reqs = _requests(6, seed=3)
+    _, stats = eng.serve(reqs)
+    assert stats.recoveries == 1
+
+
+def test_empty_stream_reports_nan_latency():
+    _, stats = _engine().serve([])
+    assert math.isnan(stats.mean_latency)
+    assert math.isnan(stats.p50) and math.isnan(stats.p95)
+    assert stats.completed == 0
+
+
+# ---------------------------------------------- mid-stage failure bytes
+def test_failed_scan_bytes_are_charged():
+    """A batch re-issued after a mid-stage MN failure pays for BOTH
+    scans: the wasted first pass's bytes accumulate on top of the
+    survivors' rerun instead of being overwritten.
+
+    The MN stage of the virtual clock is microseconds wide at real
+    bandwidths, so the test throttles the engines' per-MN scan
+    bandwidth (G_S only — scatter/gather untouched) to stretch the
+    window and land the failure deterministically mid-stage."""
+    reqs = _requests(12, seed=5)
+    clean = _engine()
+    _, st_clean = clean.serve(reqs)              # bytes are bw-independent
+    eng = _engine()
+    eng.mn_bw = [1.0] * eng.m_mn                 # stretch the MN stage
+    # kill an MN the first batch (task 0) actually scans, so the
+    # in-flight re-issue path triggers
+    victim = eng.routing.routes[(0, 0)]
+    _, st_fail = eng.serve(reqs, failures=[(0.012, victim)])
+    assert st_fail.failures == 1
+    assert st_fail.reroutes == 1 and st_fail.reinits == 0
+    # the aborted scan is strictly additive: total bus traffic exceeds
+    # the clean run's by the wasted pass
+    assert sum(st_fail.mn_access_bytes) > sum(st_clean.mn_access_bytes)
+    assert sum(st_fail.mn_gather_bytes) > sum(st_clean.mn_gather_bytes)
+
+
+# --------------------------------------------------------- autoscaler
+def test_autoscaler_monotone_and_floored():
+    a = Autoscaler(AutoscalerConfig(qps_per_cn=100.0, qps_per_mn=50.0,
+                                    min_cn=1, min_mn=3))
+    n0, m0 = a.units_for(0.0)
+    assert (n0, m0) == (1, 3)                    # floors hold at idle
+    prev = (0, 0)
+    for load in (10.0, 100.0, 500.0, 5000.0):
+        n, m = a.units_for(load)
+        assert n >= prev[0] and m >= prev[1]
+        prev = (n, m)
+
+
+def test_autoscaler_plan_follows_diurnal_curve():
+    a = Autoscaler(AutoscalerConfig(qps_per_cn=1.0, qps_per_mn=0.5,
+                                    min_cn=1, min_mn=2,
+                                    max_cn=8, max_mn=16))
+    events = a.plan(peak_load=6.0, duration_s=60.0, steps=24)
+    assert events and events[0].time_s == 0.0
+    assert all(isinstance(e, ResizeEvent) for e in events)
+    assert all(0 <= e.time_s < 60.0 for e in events)
+    ns = [e.n_cn for e in events]
+    ms = [e.m_mn for e in events]
+    assert max(ns) > min(ns) and max(ms) > min(ms)   # the curve moves
+    assert all(1 <= n <= 8 for n in ns)
+    assert all(2 <= m <= 16 for m in ms)
+    # consecutive events always change the pool (no no-op events)
+    pairs = [(e.n_cn, e.m_mn) for e in events]
+    assert all(a_ != b_ for a_, b_ in zip(pairs, pairs[1:]))
+
+
+def test_autoscaler_for_model_capacity_floor():
+    m = rm1.generation(0)
+    a = Autoscaler.for_model(m, n_replicas=2)
+    assert a.cfg.min_mn >= 1
+    n_tr, m_tr = a.units_for(0.0)
+    assert m_tr == a.cfg.min_mn                  # trough: floor only
+    mono = Autoscaler.monolithic(m)
+    assert mono.cfg.min_cn >= 1                  # must hold the model
+    n, mm = mono.units_for(1e9)
+    assert mm == 0                               # one pool only
+
+
+def test_autoscaler_accounting_helpers():
+    series = [(2, 4), (1, 2), (1, 2), (2, 4)]
+    cn_h, mn_h = node_hours(series, duration_s=4 * 3600.0)
+    assert (cn_h, mn_h) == (6.0, 12.0)
+    idle_cn, idle_mn = idle_node_hours(series, duration_s=4 * 3600.0)
+    assert (idle_cn, idle_mn) == (2.0, 4.0)
+    e = energy_joules(series, "cn_1g", "ddr_mn", duration_s=4 * 3600.0)
+    assert e > 0
+    # elastic never exceeds fixed-peak energy
+    e_fix = energy_joules([(2, 4)] * 4, "cn_1g", "ddr_mn",
+                          duration_s=4 * 3600.0)
+    assert e <= e_fix
+
+
+def test_engine_consumes_autoscaler_plan(baseline):
+    """End-to-end: the policy's ResizeEvents ARE serve()'s resize feed."""
+    reqs, want = baseline
+    span = 0.004 * len(reqs)
+    toy = Autoscaler(AutoscalerConfig(qps_per_cn=0.5, qps_per_mn=0.25,
+                                      min_cn=1, min_mn=2,
+                                      max_cn=2, max_mn=4))
+    events = toy.plan(peak_load=0.95, duration_s=span, steps=6)
+    eng, stats = _assert_bitwise(reqs, want, events)
+    assert stats.resizes >= 1
