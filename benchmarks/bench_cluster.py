@@ -7,10 +7,8 @@ cross-check against the analytic serving-unit model.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro import configs
-from repro.data.queries import QueryDist, dlrm_batch
+from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
 from repro.serving.cluster import ClusterConfig, ClusterEngine
 from repro.serving.engine import Request
@@ -18,23 +16,16 @@ from repro.serving.engine import Request
 from benchmarks.common import row, time_call
 
 
-def _requests(cfg, n, rng):
-    sizes = QueryDist(mean_size=8.0, max_size=64).sample(rng, n)
-    reqs = []
-    for i, s in enumerate(sizes):
-        b = dlrm_batch(cfg, int(s), rng)
-        reqs.append(Request(i, {"dense": b["dense"],
-                                "indices": b["indices"]},
-                            int(s), 0.002 * i))
-    return reqs
+def _requests(cfg, n, seed=0):
+    return [Request(*t) for t in dlrm_request_stream(
+        cfg, n, seed=seed, dist=QueryDist(mean_size=8.0, max_size=64))]
 
 
 def run() -> dict:
     cfg = configs.get_reduced("rm1")
     model = DLRMModel(cfg)
     params = model.init(0)
-    rng = np.random.RandomState(0)
-    reqs = _requests(cfg, 32, rng)
+    reqs = _requests(cfg, 32, seed=0)
     out = {}
 
     cc = ClusterConfig(n_cn=2, m_mn=4, batch_size=32, n_replicas=2)

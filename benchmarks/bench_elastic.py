@@ -32,7 +32,7 @@ from repro import configs
 from repro.configs import rm1
 from repro.core import allocator, hardware as hw
 from repro.core.serving_unit import UnitSpec
-from repro.data.queries import QueryDist, dlrm_batch
+from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
 from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
                                       energy_joules, idle_node_hours)
@@ -46,15 +46,10 @@ STEPS = 96
 LIFETIME_DAYS = 365.0 * hw.LIFETIME_YEARS
 
 
-def _requests(cfg, n, rng, gap_s=0.002):
-    sizes = QueryDist(mean_size=8.0, max_size=64).sample(rng, n)
-    reqs = []
-    for i, s in enumerate(sizes):
-        b = dlrm_batch(cfg, int(s), rng)
-        reqs.append(Request(i, {"dense": b["dense"],
-                                "indices": b["indices"]},
-                            int(s), gap_s * i))
-    return reqs
+def _requests(cfg, n, seed=0, gap_s=0.002):
+    return [Request(*t) for t in dlrm_request_stream(
+        cfg, n, seed=seed,
+        dist=QueryDist(mean_size=8.0, max_size=64), gap_s=gap_s)]
 
 
 def run(smoke: bool = False) -> dict:
@@ -113,9 +108,8 @@ def run(smoke: bool = False) -> dict:
     cfg = configs.get_reduced("rm1")
     model = DLRMModel(cfg)
     params = model.init(0)
-    rng = np.random.RandomState(0)
     n_req = 16 if smoke else 48
-    reqs = _requests(cfg, n_req, rng)
+    reqs = _requests(cfg, n_req, seed=0)
     span = 0.002 * n_req
     # map the diurnal day onto the stream with a toy policy whose peak
     # saturates the fixed pool below

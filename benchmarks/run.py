@@ -18,6 +18,7 @@ MODULES = [
     ("fig13_tco", "benchmarks.bench_tco"),
     ("fig14_nmp", "benchmarks.bench_nmp"),
     ("fig11_elastic", "benchmarks.bench_elastic"),
+    ("hot_row_cache", "benchmarks.bench_cache"),
     ("cluster_engine", "benchmarks.bench_cluster"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import random as _random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 
 @dataclass(frozen=True)
@@ -55,6 +55,54 @@ class RoutingTable:
     # (task id, table id) -> destination MN id  (paper Fig. 7c tuple)
     routes: Dict[Tuple[int, int], int]
     mn_access: List[float]                   # accumulated access bytes/sample
+
+
+class HotnessCounter:
+    """Measured per-table access stream (paper §IV-B: profiled hotness).
+
+    The engine bumps one counter per *valid* embedding lookup it serves,
+    so ``measured_access_bytes`` replaces the allocator's assumed
+    ``avg_pooling``-derived access profile with what the live workload
+    actually touched — hot tables then prefer DDR (where the CN row
+    cache can capture their traffic) and cold capacity tables prefer
+    NMP, measured rather than assumed.  The same classification
+    (``hot_tables``: above-median access density) feeds cache admission
+    priorities.
+    """
+
+    def __init__(self, n_tables: int):
+        self.lookups = [0.0] * n_tables
+
+    def update(self, tids: Sequence[int], counts: Sequence[float]) -> None:
+        for t, c in zip(tids, counts):
+            self.lookups[t] += float(c)
+
+    @property
+    def total(self) -> float:
+        return sum(self.lookups)
+
+    def measured_access_bytes(self, tables: Sequence[TableInfo]
+                              ) -> Optional[List[float]]:
+        """Per-tid observed access bytes (lookups x row bytes), indexed
+        by tid; None before any lookup was observed (cold start — the
+        caller falls back to the assumed profile)."""
+        if not self.total:
+            return None
+        out = [0.0] * len(self.lookups)
+        for t in tables:
+            out[t.tid] = self.lookups[t.tid] * t.dim * t.dtype_bytes
+        return out
+
+    def hot_tables(self, tables: Sequence[TableInfo]) -> Optional[Set[int]]:
+        """Tables with above-median measured access density (the same
+        cut ``allocate_heterogeneous`` uses); None on cold start."""
+        ab = self.measured_access_bytes(tables)
+        if ab is None:
+            return None
+        dens = sorted(ab[t.tid] / max(t.size_bytes, 1) for t in tables)
+        cut = dens[len(dens) // 2] if dens else 0.0
+        return {t.tid for t in tables
+                if ab[t.tid] / max(t.size_bytes, 1) > cut}
 
 
 def compute_n_replicas(tables: Sequence[TableInfo], capacities: Sequence[int]) -> int:
@@ -130,7 +178,9 @@ def route_greedy(tables: Sequence[TableInfo], alloc: Allocation,
 def allocate_heterogeneous(tables: Sequence[TableInfo],
                            capacities: Sequence[int],
                            mn_types: Sequence[str],
-                           n_replicas: Optional[int] = None) -> Allocation:
+                           n_replicas: Optional[int] = None,
+                           access_bytes: Optional[Sequence[float]] = None
+                           ) -> Allocation:
     """Node-type-aware placement for a mixed DDR/NMP pool (paper §NMP).
 
     Policy: *hot* tables — high access density (access bytes per byte of
@@ -143,6 +193,11 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
     lose a table, and node-type-aware routing can arbitrage bandwidth
     between the two copies. Homogeneous pools fall back to the plain
     greedy allocator unchanged.
+
+    ``access_bytes`` (indexed by tid, e.g. from ``HotnessCounter.
+    measured_access_bytes``) replaces each table's assumed
+    ``avg_pooling``-derived access profile with measured traffic, so
+    the hot/cold classification follows the live workload.
     """
     m = len(capacities)
     if len(mn_types) != m:
@@ -155,12 +210,17 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
     # clamp like allocate_greedy's avail[:nrep]: never more replicas
     # than there are MNs to hold them
     nrep = min(n_replicas or compute_n_replicas(tables, capacities), m)
-    dens = sorted(t.access_bytes / max(t.size_bytes, 1) for t in tables)
+
+    def _ab(t: TableInfo) -> float:
+        return (access_bytes[t.tid] if access_bytes is not None
+                else t.access_bytes)
+
+    dens = sorted(_ab(t) / max(t.size_bytes, 1) for t in tables)
     hot_cut = dens[len(dens) // 2] if dens else 0.0
     used = [0] * m
     replicas: Dict[int, List[int]] = {}
     for t in sorted(tables, key=lambda t: -t.size_bytes):
-        hot = t.access_bytes / max(t.size_bytes, 1) > hot_cut
+        hot = _ab(t) / max(t.size_bytes, 1) > hot_cut
         pref = "ddr" if hot else "nmp"
         other = "nmp" if pref == "ddr" else "ddr"
         chosen: List[int] = []

@@ -40,6 +40,10 @@ NUMA_REMOTE_BW = 52e9                # B/s achieved via UPI (Fig. 4b)
 UPI_BW = 55e9
 NIC_BW = 25e9                        # back-end RDMA, ~200Gbps ConnectX-6
 NMP_SPEEDUP = 4.0                    # DIMM- + rank-level parallelism
+# CN-side hot-row cache lives in the accelerator's HBM (A100 40GB class);
+# probe + hit service run at this bandwidth on the virtual clock
+CN_HBM_BW = 1.555e12
+CACHE_TAG_BYTES = 16                 # per-probe tag/metadata traffic
 # sustained dense-MLP FLOP/s: ranking MLPs are low-arithmetic-intensity
 # (batch <= a few hundred rows); ~8% of peak is typical (calibrated so
 # RM2's DenseNet binds GPUs, reproducing Fig. 10/13's compute regime)

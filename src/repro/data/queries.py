@@ -4,13 +4,17 @@
   small, a long tail of large ranking requests.
 - Poisson arrivals modulated by the diurnal load curve (Fig. 2b).
 - Preprocessing (G_P): hashing raw sparse features to table indices.
+- Zipf-skewed row popularity (Gupta et al.: production embedding access
+  streams concentrate on a small hot set): ``alpha > 0`` draws table
+  indices from a truncated Zipf over the row space instead of uniform
+  hashing, giving CN-side caches a hot set to exploit.
 
 Everything is seeded and wall-clock-free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Tuple
+from typing import Dict, Iterator, List, Tuple
 
 import numpy as np
 
@@ -20,6 +24,7 @@ class QueryDist:
     mean_size: float = 64.0
     sigma: float = 1.0          # lognormal shape: heavy tail
     max_size: int = 4096
+    alpha: float = 0.0          # Zipf row-popularity skew (0 = uniform)
 
     def sample(self, rng: np.random.RandomState, n: int) -> np.ndarray:
         mu = np.log(self.mean_size) - 0.5 * self.sigma ** 2
@@ -41,15 +46,53 @@ def hash_features(raw: np.ndarray, num_rows: int, salt: int = 0) -> np.ndarray:
     return (x % np.uint64(num_rows)).astype(np.int32)
 
 
+# truncated-Zipf CDFs are pure functions of (num_rows, alpha): memoize so
+# per-request batch generation doesn't recompute a row-space-sized cumsum
+_ZIPF_CDF: Dict[Tuple[int, float], np.ndarray] = {}
+
+
+def zipf_row_cdf(num_rows: int, alpha: float) -> np.ndarray:
+    """CDF of a truncated Zipf over ranks 1..num_rows: P(k) ~ 1/k^alpha."""
+    key = (int(num_rows), float(alpha))
+    cdf = _ZIPF_CDF.get(key)
+    if cdf is None:
+        w = 1.0 / np.arange(1, num_rows + 1, dtype=np.float64) ** alpha
+        cdf = np.cumsum(w)
+        cdf /= cdf[-1]
+        _ZIPF_CDF[key] = cdf
+    return cdf
+
+
+def zipf_indices(rng: np.random.RandomState, shape, num_rows: int,
+                 alpha: float) -> np.ndarray:
+    """Zipf-skewed row indices: rank k (0 = hottest row) drawn with
+    probability ~ 1/(k+1)^alpha via inverse-CDF sampling.  Row id == rank,
+    so the hot set of every table is its low row ids — a deterministic,
+    seed-stable convention the cache/placement layers can be tested
+    against."""
+    u = rng.uniform(size=shape)
+    return np.searchsorted(zipf_row_cdf(num_rows, alpha), u,
+                           side="right").astype(np.int32)
+
+
 def dlrm_batch(cfg, batch: int, rng: np.random.RandomState,
-               pooling_sigma: float = 0.3):
+               pooling_sigma: float = 0.3, alpha: float = 0.0):
     """Synthetic click-log batch for a DLRM config: dense features,
-    per-table pooled index lists (-1 padded), labels."""
+    per-table pooled index lists (-1 padded), labels.
+
+    ``alpha > 0`` switches index generation from uniform hashing to a
+    truncated Zipf over each table's rows (the skewed production access
+    pattern); ``alpha = 0`` keeps the exact uniform-hash RNG stream of
+    earlier revisions, so seeded goldens are unaffected."""
     r = cfg.dlrm
     dense = rng.randn(batch, r.num_dense_features).astype(np.float32)
     P = r.avg_pooling
-    raw = rng.randint(0, 1 << 31, size=(batch, r.num_tables, P))
-    idx = hash_features(raw, r.rows_per_table)
+    if alpha > 0.0:
+        idx = zipf_indices(rng, (batch, r.num_tables, P),
+                           r.rows_per_table, alpha)
+    else:
+        raw = rng.randint(0, 1 << 31, size=(batch, r.num_tables, P))
+        idx = hash_features(raw, r.rows_per_table)
     # variable pooling: mask out a lognormal-distributed tail per bag
     lens = np.clip(rng.lognormal(np.log(max(P * 0.7, 1.0)), pooling_sigma,
                                  size=(batch, r.num_tables)), 1, P)
@@ -57,6 +100,28 @@ def dlrm_batch(cfg, batch: int, rng: np.random.RandomState,
     idx = np.where(mask, idx, -1).astype(np.int32)
     labels = rng.binomial(1, 0.2, size=batch).astype(np.int32)
     return {"dense": dense, "indices": idx, "labels": labels}
+
+
+def dlrm_request_stream(cfg, n: int, seed: int = 0,
+                        dist: QueryDist = None,
+                        gap_s: float = 0.002) -> List[Tuple]:
+    """Standard seeded DLRM request stream: (rid, payload, size, arrival)
+    tuples ready to splat into ``serving.engine.Request``.
+
+    One explicit ``np.random.RandomState(seed)`` drives sizes and
+    payloads — the single sanctioned way for benches/launchers to build
+    engine workloads, so two builds from the same seed are identical
+    (``ClusterConfig.seed`` threads the same convention through the
+    engine).  ``dist.alpha`` selects the Zipf row-popularity skew."""
+    rng = np.random.RandomState(seed)
+    qd = dist or QueryDist(mean_size=8.0, max_size=64)
+    sizes = qd.sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(cfg, int(s), rng, alpha=qd.alpha)
+        reqs.append((i, {"dense": b["dense"], "indices": b["indices"]},
+                     int(s), gap_s * i))
+    return reqs
 
 
 def lm_batch(vocab: int, batch: int, seq: int, rng: np.random.RandomState):

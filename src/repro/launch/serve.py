@@ -7,6 +7,8 @@
       --mns 4 --mn-type "2xddr_mn+2xnmp_mn"        # heterogeneous pool
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --cns 3 --mns 6 --elastic              # diurnal resize schedule
+  PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
+      --alpha 1.05 --cache-mb 64             # skewed stream + CN row cache
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
 """
 from __future__ import annotations
@@ -18,7 +20,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.data.queries import QueryDist, dlrm_batch
+from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models import registry
 from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,
@@ -50,6 +52,14 @@ def main(argv=None):
                    help="follow a diurnal resize schedule mapped onto "
                         "the request stream (cluster mode): both pools "
                         "scale down toward the trough and back")
+    p.add_argument("--alpha", type=float, default=0.0,
+                   help="Zipf row-popularity skew of the query stream "
+                        "(0 = uniform; production streams ~1.05)")
+    p.add_argument("--cache-mb", type=float, default=0.0,
+                   help="per-CN hot-row cache budget in MB (cluster mode; "
+                        "0 disables)")
+    p.add_argument("--cache-policy", default="lru", choices=["lru", "lfu"],
+                   help="hot-row cache eviction policy")
     p.add_argument("--no-kernel", dest="use_kernel", action="store_false",
                    default=True)
     args = p.parse_args(argv)
@@ -61,20 +71,18 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
 
     if cfg.family == "dlrm":
-        qd = QueryDist(mean_size=8.0, max_size=4 * args.batch)
-        sizes = qd.sample(rng, args.requests)
-        reqs = []
-        for i, s in enumerate(sizes):
-            b = dlrm_batch(cfg, int(s), rng)
-            reqs.append(Request(i, {"dense": b["dense"],
-                                    "indices": b["indices"]},
-                                int(s), 0.001 * i))
+        qd = QueryDist(mean_size=8.0, max_size=4 * args.batch,
+                       alpha=args.alpha)
+        reqs = [Request(*t) for t in
+                dlrm_request_stream(cfg, args.requests, seed=args.seed,
+                                    dist=qd, gap_s=0.001)]
         if args.cluster:
             mn_types = parse_mn_types(args.mn_type, args.mns)
             engine = ClusterEngine(model, params, ClusterConfig(
                 n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
                 n_replicas=args.replicas, use_kernel=args.use_kernel,
-                mn_types=mn_types))
+                mn_types=mn_types, cache_mb=args.cache_mb,
+                cache_policy=args.cache_policy, seed=args.seed))
             failures = ([] if args.fail_mn is None
                         else [(0.001 * args.requests / 2, args.fail_mn)])
             resizes = []
@@ -107,6 +115,15 @@ def main(argv=None):
                       f"{gat / 1e6:.2f}MB over the fabric "
                       f"({100 * (1 - gat / max(mem, 1)):.1f}% gather "
                       f"bytes saved vs raw rows)")
+            if args.cache_mb > 0:
+                probes = stats.cache_hits + stats.cache_misses
+                hr = stats.cache_hits / max(probes, 1)
+                print(f"[serve] hot-row cache ({args.cache_policy}, "
+                      f"{args.cache_mb:g}MB/CN): {100 * hr:.1f}% hit rate, "
+                      f"{stats.cache_bytes_saved / 1e6:.2f}MB gather "
+                      f"bytes saved, {stats.cache_evictions} evictions, "
+                      f"{stats.cache_invalidations} coherence "
+                      f"invalidations")
             if args.elastic:
                 print(f"[serve] elastic: {stats.resizes} resizes applied, "
                       f"{stats.migration_bytes / 1e6:.2f}MB shard "

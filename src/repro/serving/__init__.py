@@ -4,9 +4,11 @@ simulator.ClusterSim  — discrete-event simulator (queueing, policies)
 engine.*ServingEngine — real-JAX single-unit engines
 cluster.ClusterEngine — real-JAX multi-unit engine with replica routing
 autoscaler.Autoscaler — diurnal elastic-resize policy for the engine
+cache.RowCache        — per-CN hot-row embedding cache (LRU/LFU)
 """
 from repro.serving.autoscaler import (Autoscaler,  # noqa: F401
                                       AutoscalerConfig, ResizeEvent)
+from repro.serving.cache import CacheStats, RowCache  # noqa: F401
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,  # noqa: F401
                                    ClusterStats)
 from repro.serving.engine import (DLRMServingEngine,  # noqa: F401

@@ -48,6 +48,25 @@ gather NIC path with the G_S stage.  Because pooling accumulates slots
 in the same ascending order on every node, scores before, during, and
 after any resize are bitwise-identical to a fixed-pool run.
 
+Hot-row caching (FlexEMR; Gupta et al.): with ``cache_mb > 0`` every CN
+carves a byte budget out of its HBM for a ``serving.cache.RowCache`` and
+splits each MemAccess into cache **hits** — served locally, zero memory-
+bus and gather bytes on the virtual clock — and **misses**, routed to
+the MN pool exactly as before (miss rows are admitted on return,
+LRU/LFU under ``cache_policy``, with measured hot tables outranking
+cold ones at eviction time).  The numeric pooling path is unchanged:
+cached rows are bitwise copies of the authoritative shard rows, and the
+fused bag accumulates the merged hit+miss row set in the same ascending
+slot order, so a cached engine scores **bitwise-identically** to the
+uncached baseline — the cache moves bytes and time, never values.
+Coherence: whenever a CN's authoritative serving copy of a table moves
+(``fail_mn`` / ``recover_mn`` re-route, ``resize`` migration, a reinit's
+fresh allocation), exactly that table's rows are invalidated in that
+CN's cache; ``reload_params`` (DLRM weight reload) flushes everything.
+NMP-routed lookups bypass the cache — their rows never cross the fabric
+to begin with, which is why measured-hotness placement steers hot
+tables toward DDR where the cache can capture them.
+
 Latency accounting is wall-clock-free: a virtual clock driven by the
 analytic unit model's stage times (G_P, scatter, G_S + gather from
 *measured* per-MN access/gather bytes at *per-node-type* bandwidths,
@@ -70,6 +89,7 @@ from repro.core import hardware as hw
 from repro.core.hardware import NODE_TYPES
 from repro.core.scheduler import Batch, Batcher, Query
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
+from repro.serving.cache import CacheStats, RowCache
 from repro.serving.engine import Request, Result
 
 
@@ -122,6 +142,12 @@ class ClusterConfig:
     mn_type: str = "ddr_mn"       # default type for the whole pool
     mn_types: Optional[Sequence[str]] = None   # per-MN override, len m_mn
     mn_recovery_s: float = fail_mod.recovery_cost_s("mn")
+    cache_mb: float = 0.0         # per-CN hot-row cache budget (CN HBM)
+    cache_policy: str = "lru"     # lru | lfu
+    seed: int = 0                 # the stream seed this engine serves
+                                  # (dlrm_request_stream convention); the
+                                  # serving path itself holds no RNG, so
+                                  # same-seed runs give identical stats
 
     def resolved_mn_types(self) -> List[str]:
         types = (list(self.mn_types) if self.mn_types is not None
@@ -147,6 +173,13 @@ class ClusterStats:
     migration_bytes: float = 0.0  # shard bytes moved by resizes
     retired_access_bytes: float = 0.0   # departed (shrunk-away) MNs' scans
     retired_gather_bytes: float = 0.0   # ... and their shipped bytes
+    p99: float = float("nan")     # tail latency (nan when nothing completed)
+    reissues: int = 0             # batches re-executed after in-flight MN loss
+    cache_hits: int = 0           # CN hot-row cache counters (0 = no cache)
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    cache_invalidations: int = 0  # rows dropped by coherence events
+    cache_bytes_saved: float = 0.0      # gather bytes hits kept off the NIC
 
 
 class ClusterEngine:
@@ -189,10 +222,22 @@ class ClusterEngine:
         self._dense_step = jax.jit(
             lambda p, d, pooled: jax.nn.sigmoid(
                 model.dense_forward(p, d, pooled)))
+        # measured per-table hotness: feeds cache admission priorities
+        # and re-allocation (reinit / replan) hot/cold classification
+        self.hotness = em.HotnessCounter(self.T)
+        # per-CN hot-row caches + the routes their entries were fetched
+        # over (the coherence protocol diffs these on every rebuild)
+        self.caches: List[RowCache] = self._make_caches(self.n_cn)
+        self._cache_routes: List[Dict[int, int]] = []
+        self._retired_cache = CacheStats()     # departed CNs' counters
+        self.cache_bytes_saved = 0.0
+        self._batch_cache_s = 0.0              # last batch's probe+hit time
+        self._sync_caches()
         # counters / accounting
         self.failures = 0
         self.reroutes = 0
         self.reinits = 0
+        self.reissues = 0
         self.recoveries = 0
         self.resizes = 0
         self.migration_bytes = 0.0
@@ -235,6 +280,107 @@ class ClusterEngine:
                 flat = jnp.zeros((0, self.D), embed.dtype)
             self._shard_flat.append(flat)
 
+    # ------------------------------------------------------------- caching
+    def _make_caches(self, n_cn: int) -> List[RowCache]:
+        if self.cfg.cache_mb <= 0:
+            return []
+        budget = int(self.cfg.cache_mb * 1e6)
+        return [RowCache(budget, self.D * 4, self.cfg.cache_policy)
+                for _ in range(n_cn)]
+
+    def _sync_caches(self) -> None:
+        """Coherence: after any routing rebuild, invalidate in each CN's
+        cache exactly the tables whose authoritative serving copy (the
+        MN this CN's lookups route to) moved — rows of unmoved tables
+        survive.  Also refreshes the measured hot-table admission set."""
+        if not self.caches:
+            return
+        hot = self.hotness.hot_tables(self.tables)
+        for task, cache in enumerate(self.caches):
+            new = {tid: self.routing.routes[(task, tid)]
+                   for tid in range(self.T)}
+            old = (self._cache_routes[task]
+                   if task < len(self._cache_routes) else {})
+            for tid in range(self.T):
+                if old.get(tid) != new[tid]:
+                    cache.invalidate_table(tid)
+            if task < len(self._cache_routes):
+                self._cache_routes[task] = new
+            else:
+                self._cache_routes.append(new)
+            cache.set_hot_tables(hot)
+
+    def _refresh_hot_tables(self) -> None:
+        """Install the current measured hot-table classification into
+        every CN cache.  Runs on coherence syncs AND periodically during
+        healthy serving (`run_batch`), so the admission priority tracks
+        the live workload instead of waiting for a failure/resize."""
+        if not self.caches:
+            return
+        hot = self.hotness.hot_tables(self.tables)
+        for cache in self.caches:
+            cache.set_hot_tables(hot)
+
+    def _cache_serve(self, cache: RowCache, tids: Sequence[int],
+                     sub: np.ndarray) -> int:
+        """Probe one DDR shard's lookup stream through a CN cache in
+        deterministic order (table-ascending, then batch-row-major slot
+        order); misses are admitted fetch-on-miss.  Returns hits."""
+        hits = 0
+        lookup = cache.lookup
+        for k, tid in enumerate(tids):
+            rows = sub[:, k, :].ravel()
+            for row in rows[rows >= 0].tolist():
+                if lookup(tid, row):
+                    hits += 1
+        return hits
+
+    def cache_stats(self) -> CacheStats:
+        """Aggregate cache counters over live CNs + retired (shrunk-away)
+        CN caches."""
+        cs = CacheStats()
+        for c in self.caches:
+            cs.absorb(c.stats)
+        cs.absorb(self._retired_cache)
+        return cs
+
+    def reload_params(self, params) -> None:
+        """DLRM weight reload: every authoritative row changed, so the
+        MN shards re-materialize and every CN cache flushes."""
+        self.params = params
+        self._build_shards()
+        for cache in self.caches:
+            cache.flush()
+
+    def replan_placement(self) -> None:
+        """Re-run node-type-aware placement with *measured* hotness (the
+        serve-path counters) instead of the assumed ``avg_pooling``
+        profile: hot tables migrate toward DDR MNs — where the CN cache
+        can capture their traffic — and cold capacity tables toward NMP.
+        Placement only targets live MNs (a replica parked on a dead node
+        would silently shrink the effective replication factor), and
+        routing rebuilds / caches invalidate per the moved routes."""
+        live = [j for j in range(self.m_mn) if j not in self.dead]
+        sub = em.allocate_heterogeneous(
+            self.tables,
+            [self.capacities[j] for j in live],
+            [self.mn_types[j] for j in live],
+            n_replicas=min(self.cfg.n_replicas, len(live)),
+            access_bytes=self.hotness.measured_access_bytes(self.tables))
+        mn_used = [0] * self.m_mn
+        for i, j in enumerate(live):
+            mn_used[j] = sub.mn_used[i]
+        self.alloc = em.Allocation(
+            replicas={tid: sorted(live[i] for i in reps)
+                      for tid, reps in sub.replicas.items()},
+            mn_used=mn_used, n_replicas=sub.n_replicas)
+        self.routing = em.route_greedy(self.tables, self.alloc,
+                                       self.n_cn, self.m_mn,
+                                       exclude=sorted(self.dead),
+                                       mn_weights=self._route_w)
+        self._build_shards()
+        self._sync_caches()
+
     # ------------------------------------------------------------ failure
     def fail_mn(self, j: int) -> None:
         """Kill MN `j`: re-route to surviving replicas, or re-initialize
@@ -256,7 +402,8 @@ class ClusterEngine:
             self.dead.clear()
             self.alloc = em.allocate_heterogeneous(
                 self.tables, self.capacities, self.mn_types,
-                n_replicas=self.cfg.n_replicas)
+                n_replicas=self.cfg.n_replicas,
+                access_bytes=self.hotness.measured_access_bytes(self.tables))
             self.routing = em.route_greedy(self.tables, self.alloc,
                                            self.n_cn, self.m_mn,
                                            mn_weights=self._route_w)
@@ -267,6 +414,7 @@ class ClusterEngine:
                                            self.n_cn, self.m_mn,
                                            exclude=sorted(self.dead),
                                            mn_weights=self._route_w)
+        self._sync_caches()
 
     def recover_mn(self, j: int) -> None:
         """Bring a failed MN back: its shard is still materialized (or was
@@ -281,6 +429,7 @@ class ClusterEngine:
                                        self.n_cn, self.m_mn,
                                        exclude=sorted(self.dead),
                                        mn_weights=self._route_w)
+        self._sync_caches()
 
     # --------------------------------------------------------- elasticity
     def resize(self, n_cn: Optional[int] = None, m_mn: Optional[int] = None,
@@ -340,11 +489,21 @@ class ClusterEngine:
             self.dead = dead
             self.m_mn = new_m
             self._build_shards()
+        if new_n != self.n_cn and self.caches:
+            if new_n < self.n_cn:
+                # a departing CN retires its cache with its counters
+                for cache in self.caches[new_n:]:
+                    self._retired_cache.absorb(cache.stats)
+                self.caches = self.caches[:new_n]
+                self._cache_routes = self._cache_routes[:new_n]
+            else:
+                self.caches += self._make_caches(new_n - self.n_cn)
         self.n_cn = new_n
         self.routing = em.route_greedy(self.tables, self.alloc,
                                        self.n_cn, self.m_mn,
                                        exclude=sorted(self.dead),
                                        mn_weights=self._route_w)
+        self._sync_caches()
         self.unit_model = ServingUnitModel(
             self.model.cfg, UnitSpec(self.n_cn, self.cfg.cn_type,
                                      self.m_mn, self.cfg.mn_type,
@@ -383,13 +542,25 @@ class ClusterEngine:
         Returns (scores, per-MN memory-bus bytes scanned, per-MN gather
         bytes shipped to the CN).  For a DDR MN the two are equal (raw
         rows cross the fabric); an NMP MN scans the same rows locally
-        but ships only ``valid rows x T_j x D`` pooled bytes."""
+        but ships only ``valid rows x T_j x D`` pooled bytes.
+
+        With a CN cache, each DDR MemAccess splits into hits — served
+        from the CN's resident copy, charged to neither the MN bus nor
+        the fabric — and misses, routed (and admitted) as before.  The
+        pooling math is untouched: cache rows are bitwise copies, so
+        the fused bag over the merged hit+miss set in ascending slot
+        order IS the uncached computation, and only the byte/time
+        accounting moves."""
         shards = em.shard_assignment(self.alloc, self.routing, self.T,
                                      self.m_mn, task)
         B = dense.shape[0]
         pooled = np.zeros((B, self.T, self.D), np.float32)
         mem_j = np.zeros(self.m_mn)
         gat_j = np.zeros(self.m_mn)
+        row_b = self.D * 4
+        cache = self.caches[task] if self.caches else None
+        batch_probes = 0
+        batch_hit_bytes = 0.0
         for j, tids in enumerate(shards):
             if not tids:
                 continue
@@ -397,12 +568,26 @@ class ClusterEngine:
                 raise LookupError(f"routing targets dead MN {j}")
             sub = idx[:, tids, :]
             pooled[:, tids, :] = np.asarray(self._mn_pool(j, tids, sub))
-            mem_j[j] = float((sub >= 0).sum()) * self.D * 4
-            if self.mn_nmp[j]:
-                live_rows = int((sub >= 0).any(axis=(1, 2)).sum())
-                gat_j[j] = float(live_rows * len(tids)) * self.D * 4
-            else:
+            per_table = (sub >= 0).sum(axis=(0, 2))
+            self.hotness.update(tids, per_table)
+            nvalid = int(per_table.sum())
+            if cache is not None and not self.mn_nmp[j]:
+                hits = self._cache_serve(cache, tids, sub)
+                mem_j[j] = float(nvalid - hits) * row_b
                 gat_j[j] = mem_j[j]
+                self.cache_bytes_saved += float(hits) * row_b
+                batch_probes += nvalid
+                batch_hit_bytes += float(hits) * row_b
+            elif self.mn_nmp[j]:
+                mem_j[j] = float(nvalid) * row_b
+                live_rows = int((sub >= 0).any(axis=(1, 2)).sum())
+                gat_j[j] = float(live_rows * len(tids)) * row_b
+            else:
+                mem_j[j] = float(nvalid) * row_b
+                gat_j[j] = mem_j[j]
+        # probe tags + hit rows stream from CN HBM on the virtual clock
+        self._batch_cache_s = ((batch_probes * hw.CACHE_TAG_BYTES
+                                + batch_hit_bytes) / hw.CN_HBM_BW)
         scores = np.asarray(self._dense_step(self.params,
                                              jnp.asarray(dense),
                                              jnp.asarray(pooled)))
@@ -425,6 +610,7 @@ class ClusterEngine:
         comparable to ServingUnitModel / ClusterSim."""
         cfg = self.cfg
         batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
+        self._refresh_hot_tables()     # hotness measured by prior serving
         fail_q = sorted(failures)
         for _, j in fail_q:
             # ids refer to the pool at serve start; an id only becomes a
@@ -448,15 +634,19 @@ class ClusterEngine:
         mn_barrier = 0.0              # sequential lock-step over the pool
         mig_end = 0.0                 # background migration busy-until
 
-        def mn_stage(mem_j: np.ndarray, gat_j: np.ndarray
-                     ) -> Tuple[np.ndarray, float]:
+        def mn_stage(mem_j: np.ndarray, gat_j: np.ndarray,
+                     cache_s: float = 0.0) -> Tuple[np.ndarray, float]:
             """G_S + gather time for one batch: every MN scans (and, for
             NMP, pools — a bandwidth-bound streaming reduction) locally
             in parallel at its own memory bandwidth, then the batch's
             gather bytes serialize into the owning CN's back-end NIC.
+            The CN-side cache probe + hit service overlaps the remote
+            scans (hits never wait on the fabric), so it widens the
+            stage only if it outlasts the slowest MN.
             Returns (per-MN stage contributions, batch gating time)."""
             stage_j = mem_j / mn_bw + gat_j / hw.NIC_BW
-            gate = float((mem_j / mn_bw).max() + gat_j.sum() / hw.NIC_BW)
+            gate = float(max((mem_j / mn_bw).max(), cache_s)
+                         + gat_j.sum() / hw.NIC_BW)
             return stage_j, gate
 
         def inject(upto: float) -> None:
@@ -524,7 +714,7 @@ class ClusterEngine:
                 mn_start = max(pre_done + st.t_comm_in * scale, mn_barrier)
                 inject(mn_start)
             scores, mem_j, gat_j = self._execute(task, dense, idx)
-            stage_j, t_mn = mn_stage(mem_j, gat_j)    # slowest MN + gather
+            stage_j, t_mn = mn_stage(mem_j, gat_j, self._batch_cache_s)
 
             # a failure landing inside this batch's MN stage hits packets
             # in flight: rebuild routing, re-issue on the survivors
@@ -538,11 +728,13 @@ class ClusterEngine:
                     # the aborted scan's traffic was already on the wire
                     # and the bus — charge the wasted first pass before
                     # re-issuing on the survivors
+                    self.reissues += 1
                     self.mn_access_bytes += mem_j
                     self.mn_gather_bytes += gat_j
                     self.mn_stage_s += stage_j
                     scores, mem_j, gat_j = self._execute(task, dense, idx)
-                    stage_j, t_mn = mn_stage(mem_j, gat_j)
+                    stage_j, t_mn = mn_stage(mem_j, gat_j,
+                                             self._batch_cache_s)
                     mn_start = t_fail + cfg.mn_recovery_s
             # an in-flight shard migration fair-shares the gather NIC
             # path with this batch: each stream extends by the other's
@@ -558,6 +750,11 @@ class ClusterEngine:
             self.mn_stage_s += stage_j
             self._mn_stage_max_sum += t_mn
             self._n_batches += 1
+            # keep admission priorities tracking the live workload even
+            # on an event-free run (deterministic: a pure function of
+            # the stream prefix served so far)
+            if self.caches and self._n_batches % 8 == 0:
+                self._refresh_hot_tables()
 
             g_start = max(mn_done, cn_gpu_free[task])
             done = g_start + st.t_dense * scale
@@ -600,10 +797,12 @@ class ClusterEngine:
             mean_lat = float(lats.mean())
             p50 = float(np.percentile(lats, 50))
             p95 = float(np.percentile(lats, 95))
+            p99 = float(np.percentile(lats, 99))
         else:       # nothing completed: report nan, not a fabricated 0.0
-            mean_lat = p50 = p95 = float("nan")
+            mean_lat = p50 = p95 = p99 = float("nan")
         live = [a for j, a in enumerate(self.mn_access_bytes)
                 if j not in self.dead]
+        cs = self.cache_stats()
         stats = ClusterStats(
             completed=len(results),
             mean_latency=mean_lat,
@@ -621,6 +820,13 @@ class ClusterEngine:
             migration_bytes=self.migration_bytes,
             retired_access_bytes=self.retired_access_bytes,
             retired_gather_bytes=self.retired_gather_bytes,
+            p99=p99,
+            reissues=self.reissues,
+            cache_hits=cs.hits,
+            cache_misses=cs.misses,
+            cache_evictions=cs.evictions,
+            cache_invalidations=cs.invalidations,
+            cache_bytes_saved=self.cache_bytes_saved,
         )
         results.sort(key=lambda r: r.rid)
         return results, stats

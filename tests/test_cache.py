@@ -1,0 +1,380 @@
+"""CN-side hot-row cache: policy units + engine coherence (issue #4).
+
+Three layers:
+
+1. ``RowCache`` units: admission, LRU/LFU eviction order, byte budget,
+   hot-table priority, value fidelity, invalidation/flush counters.
+2. Bitwise parity: on a pinned grid of {policy, budget, skew, pool mix}
+   a cached engine must score bitwise-identically to the uncached
+   baseline while the byte accounting identity
+   ``bytes_saved == uncached_gather - cached_gather`` holds exactly.
+3. Coherence regressions: ``fail_mn`` / ``recover_mn`` / ``resize``
+   invalidate exactly the tables whose authoritative serving copy
+   (the routed MN) moved; ``reload_params`` flushes everything; the
+   measured hotness counters steer placement and admission.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import rm1
+from repro.core import embedding_manager as em
+from repro.data.queries import QueryDist, dlrm_request_stream
+from repro.models.dlrm import DLRMModel
+from repro.serving.cache import RowCache
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-cache-test",
+    dlrm=rm1.DLRMConfig(num_tables=6, rows_per_table=64, embed_dim=8,
+                        avg_pooling=5, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+T = CFG.dlrm.num_tables
+ROW_B = CFG.dlrm.embed_dim * 4
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = DLRMModel(CFG)
+    return model, model.init(0)
+
+
+def make_requests(n, seed=0, alpha=0.0):
+    qd = QueryDist(mean_size=5.0, max_size=24, alpha=alpha)
+    return [Request(*t) for t in
+            dlrm_request_stream(CFG, n, seed=seed, dist=qd, gap_s=0.005)]
+
+
+def make_engine(model, params, cache_mb=0.001, policy="lru", **kw):
+    kw.setdefault("n_cn", 2)
+    kw.setdefault("m_mn", 4)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("n_replicas", 2)
+    return ClusterEngine(model, params, ClusterConfig(
+        cache_mb=cache_mb, cache_policy=policy, **kw))
+
+
+# ------------------------------------------------------------- RowCache units
+def test_cache_admission_and_byte_budget():
+    c = RowCache(capacity_bytes=4 * 32, row_bytes=32)
+    for row in range(6):
+        assert not c.lookup(0, row)          # cold miss, admitted
+    assert len(c) == 4                       # budget: 4 rows resident
+    assert c.size_bytes <= c.capacity_bytes
+    assert c.stats.misses == 6 and c.stats.evictions == 2
+
+
+def test_cache_lru_eviction_order():
+    c = RowCache(capacity_bytes=3 * 32, row_bytes=32, policy="lru")
+    for row in (0, 1, 2):
+        c.admit(0, row)
+    assert c.probe(0, 0)                     # 0 becomes most-recent
+    c.admit(0, 3)                            # evicts 1 (least recent)
+    assert (0, 1) not in c
+    assert all((0, r) in c for r in (0, 2, 3))
+    c.admit(0, 4)                            # evicts 2
+    assert (0, 2) not in c and (0, 0) in c
+
+
+def test_cache_lfu_eviction_order():
+    c = RowCache(capacity_bytes=3 * 32, row_bytes=32, policy="lfu")
+    for row in (0, 1, 2):
+        c.admit(0, row)
+    for _ in range(3):
+        assert c.probe(0, 0)
+    assert c.probe(0, 2)
+    c.admit(0, 3)                            # evicts 1: lowest frequency
+    assert (0, 1) not in c
+    c.admit(0, 4)                            # ties (freq 1): 3 older than 4
+    assert (0, 3) not in c and (0, 0) in c and (0, 2) in c
+
+
+def test_cache_lfu_heap_bounded_on_hit_dominated_stream():
+    """A hit-dominated LFU stream (few evictions) must not grow the lazy
+    heap per probe: stale tuples compact once they outnumber residents."""
+    c = RowCache(capacity_bytes=8 * 32, row_bytes=32, policy="lfu")
+    for row in range(8):
+        c.admit(0, row)
+    for _ in range(500):
+        for row in range(8):
+            assert c.probe(0, row)
+    assert len(c._heap) <= 4 * len(c) + 64
+    c.admit(0, 99)                           # eviction still works after
+    assert (0, 99) in c and len(c) == 8
+
+
+def test_cache_zero_capacity_rejects():
+    c = RowCache(capacity_bytes=16, row_bytes=32)
+    assert not c.admit(0, 1)
+    assert len(c) == 0 and c.stats.rejects == 1
+
+
+def test_cache_hot_table_priority():
+    """A cold-table row must never displace the hot working set, and a
+    hot row evicts cold residents first."""
+    c = RowCache(capacity_bytes=3 * 32, row_bytes=32, policy="lru")
+    c.set_hot_tables({1})
+    for row in (0, 1, 2):
+        c.admit(1, row)                      # hot rows fill the budget
+    assert not c.admit(0, 7)                 # cold incoming: rejected
+    assert c.stats.rejects == 1 and len(c) == 3
+    c.invalidate_table(1)
+    c.admit(0, 7)                            # cold admits into free space
+    c.admit(1, 0)
+    c.admit(1, 1)
+    c.admit(1, 2)                            # full again: evicts cold (0,7)
+    assert (0, 7) not in c
+    assert all((1, r) in c for r in (0, 1, 2))
+
+
+def test_cache_value_fidelity_and_invalidation():
+    c = RowCache(capacity_bytes=8 * 32, row_bytes=32)
+    v0 = np.arange(8.0)
+    c.admit(2, 5, v0)
+    c.admit(3, 5, v0 * 2)
+    np.testing.assert_array_equal(c.get(2, 5), v0)
+    assert c.table_rows(2) == 1
+    assert c.invalidate_table(2) == 1        # only table 2's rows drop
+    assert (2, 5) not in c and (3, 5) in c
+    assert c.stats.invalidations == 1
+    assert c.invalidate_table(2) == 0        # idempotent
+    assert c.flush() == 1                    # weight reload drops the rest
+    assert len(c) == 0 and c.stats.invalidations == 2
+
+
+def test_cache_rejects_unknown_policy(model_and_params):
+    with pytest.raises(ValueError):
+        RowCache(1024, 32, policy="fifo")
+    with pytest.raises(ValueError):
+        make_engine(*model_and_params, policy="mru")
+
+
+# --------------------------------------------------- bitwise parity + bytes
+@pytest.mark.parametrize("policy,cache_mb,alpha,mn_types", [
+    ("lru", 1.0, 0.0, None),
+    ("lru", 1.0, 1.05, None),
+    ("lfu", 1.0, 1.05, None),
+    ("lru", 0.002, 1.05, None),              # tight budget: evictions fire
+    ("lru", 1.0, 1.05, ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]),
+])
+def test_cached_scores_bitwise_equal_uncached(model_and_params, policy,
+                                              cache_mb, alpha, mn_types):
+    model, params = model_and_params
+    reqs = make_requests(12, seed=3, alpha=alpha)
+    kw = {} if mn_types is None else {"mn_types": mn_types}
+    base = make_engine(model, params, cache_mb=0.0, **kw)
+    res_b, st_b = base.serve(reqs)
+    eng = make_engine(model, params, cache_mb=cache_mb, policy=policy, **kw)
+    res_c, st_c = eng.serve(reqs)
+    assert st_c.completed == len(reqs)
+    want = {r.rid: r.outputs for r in res_b}
+    for r in res_c:
+        assert np.array_equal(r.outputs, want[r.rid])
+    assert st_c.cache_hits > 0
+    # exact byte accounting: every hit is a gather byte that never
+    # crossed the fabric (and a scan byte that never hit the MN bus)
+    assert st_c.cache_bytes_saved == \
+        sum(st_b.mn_gather_bytes) - sum(st_c.mn_gather_bytes)
+    assert st_c.cache_bytes_saved == st_c.cache_hits * ROW_B
+    if cache_mb == 0.002:
+        assert st_c.cache_evictions > 0
+
+
+def test_skew_raises_hit_rate(model_and_params):
+    """The cache is worth its budget only because the stream is skewed:
+    Zipf alpha=1.05 must hit far more often than the uniform stream."""
+    model, params = model_and_params
+    rates = {}
+    for alpha in (0.0, 1.05):
+        eng = make_engine(model, params, cache_mb=0.002)
+        _, st = eng.serve(make_requests(12, seed=3, alpha=alpha))
+        rates[alpha] = st.cache_hits / (st.cache_hits + st.cache_misses)
+    assert rates[1.05] > rates[0.0] + 0.15
+
+
+# ------------------------------------------------------ coherence regressions
+def _resident_by_table(cache):
+    return {tid: cache.table_rows(tid) for tid in range(T)}
+
+
+def _routes(eng, task):
+    return {tid: eng.routing.routes[(task, tid)] for tid in range(T)}
+
+
+def test_fail_mn_invalidates_exactly_moved_tables(model_and_params):
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0)
+    eng.serve(make_requests(10, seed=5, alpha=1.05))
+    before = [_routes(eng, task) for task in range(eng.n_cn)]
+    resident = [_resident_by_table(c) for c in eng.caches]
+    assert any(sum(r.values()) for r in resident)
+    eng.fail_mn(1)
+    for task, cache in enumerate(eng.caches):
+        after = _routes(eng, task)
+        for tid in range(T):
+            if before[task][tid] != after[tid]:      # authoritative copy moved
+                assert cache.table_rows(tid) == 0
+            else:                                    # untouched tables survive
+                assert cache.table_rows(tid) == resident[task][tid]
+    moved_rows = sum(resident[task][tid]
+                     for task in range(eng.n_cn) for tid in range(T)
+                     if before[task][tid] != _routes(eng, task)[tid])
+    assert eng.cache_stats().invalidations == moved_rows > 0
+
+
+def test_recover_mn_invalidates_moved_tables(model_and_params):
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0)
+    eng.serve(make_requests(8, seed=6, alpha=1.05))
+    eng.fail_mn(2)
+    inv_after_fail = eng.cache_stats().invalidations
+    eng.serve(make_requests(8, seed=7, alpha=1.05))   # re-warm on survivors
+    before = [_routes(eng, task) for task in range(eng.n_cn)]
+    resident = [_resident_by_table(c) for c in eng.caches]
+    eng.recover_mn(2)
+    for task, cache in enumerate(eng.caches):
+        after = _routes(eng, task)
+        for tid in range(T):
+            if before[task][tid] != after[tid]:
+                assert cache.table_rows(tid) == 0
+            else:
+                assert cache.table_rows(tid) == resident[task][tid]
+    assert eng.cache_stats().invalidations > inv_after_fail
+
+
+def test_resize_invalidates_moved_tables_and_scores_survive(model_and_params):
+    model, params = model_and_params
+    reqs = make_requests(14, seed=8, alpha=1.05)
+    base = make_engine(model, params, cache_mb=0.0)
+    res_b, _ = base.serve(reqs)
+    eng = make_engine(model, params, cache_mb=1.0)
+    span = 0.005 * len(reqs)
+    res_c, st = eng.serve(reqs, resizes=[(span * 0.3, 2, 6),
+                                         (span * 0.7, 2, 3)])
+    assert st.resizes == 2
+    assert st.completed == len(reqs)
+    want = {r.rid: r.outputs for r in res_b}
+    for r in res_c:
+        assert np.array_equal(r.outputs, want[r.rid])
+    assert st.cache_invalidations > 0        # migration moved serving copies
+
+
+def test_resize_cn_pool_cache_lifecycle(model_and_params):
+    """A joining CN starts with a cold cache; a departing CN retires its
+    counters into the aggregate rather than losing them."""
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0, n_cn=3)
+    eng.serve(make_requests(10, seed=9, alpha=1.05))
+    hits_before = eng.cache_stats().hits
+    assert hits_before > 0
+    eng.resize(n_cn=1)
+    assert len(eng.caches) == 1
+    assert eng.cache_stats().hits == hits_before     # retired, not lost
+    eng.resize(n_cn=2)
+    assert len(eng.caches) == 2
+    assert len(eng.caches[1]) == 0                   # joiner is cold
+
+
+def test_reload_params_flushes_everything(model_and_params):
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0)
+    reqs = make_requests(8, seed=10, alpha=1.05)
+    eng.serve(reqs)
+    assert any(len(c) for c in eng.caches)
+    fresh = model.init(1)
+    eng.reload_params(fresh)
+    assert all(len(c) == 0 for c in eng.caches)
+    # and the engine now scores with the new weights, matching an
+    # engine built directly on them
+    res, _ = eng.serve(reqs)
+    want_eng = make_engine(model, fresh, cache_mb=0.0)
+    res_w, _ = want_eng.serve(reqs)
+    want = {r.rid: r.outputs for r in res_w}
+    for r in res:
+        assert np.array_equal(r.outputs, want[r.rid])
+
+
+# ------------------------------------------------------- measured hotness
+def test_hotness_counters_track_valid_lookups(model_and_params):
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=0.0)
+    reqs = make_requests(6, seed=11)
+    valid = sum(int((r.payload["indices"] >= 0).sum()) for r in reqs)
+    eng.serve(reqs)
+    assert sum(eng.hotness.lookups) == valid
+    assert eng.hotness.measured_access_bytes(eng.tables) is not None
+
+
+def test_measured_hotness_overrides_assumed_placement():
+    """allocate_heterogeneous with measured counters flips a table whose
+    live traffic contradicts its assumed avg_pooling profile."""
+    tables = [em.TableInfo(t, rows=64, dim=8, avg_pooling=4.0)
+              for t in range(4)]
+    caps = [4 * tables[0].size_bytes] * 4
+    types = ["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]
+    # assumed: all densities equal -> nothing is "hot" (> median)
+    assumed = em.allocate_heterogeneous(tables, caps, types, n_replicas=1)
+    # measured: table 3 absorbs nearly all lookups -> hot -> DDR first copy
+    hot = em.HotnessCounter(4)
+    hot.update([0, 1, 2, 3], [1.0, 1.0, 1.0, 1000.0])
+    measured = em.allocate_heterogeneous(
+        tables, caps, types, n_replicas=1,
+        access_bytes=hot.measured_access_bytes(tables))
+    assert set(hot.hot_tables(tables)) == {3}
+    assert all(j in (2, 3) for j in assumed.replicas[3])   # cold -> NMP
+    assert all(j in (0, 1) for j in measured.replicas[3])  # hot -> DDR
+
+
+def test_healthy_serve_installs_measured_hot_set(model_and_params):
+    """Admission priority must engage on an event-free run: after enough
+    batches the caches carry the measured hot-table classification, not
+    the cold-start None."""
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0)
+    eng.serve(make_requests(20, seed=13, alpha=1.05))
+    for cache in eng.caches:                 # periodic in-serve refresh
+        assert cache._hot is not None
+    want = eng.hotness.hot_tables(eng.tables)
+    eng.serve([])                            # serve-entry refresh syncs up
+    for cache in eng.caches:
+        assert cache._hot == want
+
+
+def test_replan_placement_skips_dead_mns(model_and_params):
+    """Replanning while MNs are down must not park replicas on them —
+    that would silently shrink the effective replication factor."""
+    model, params = model_and_params
+    eng = make_engine(model, params, cache_mb=1.0)
+    reqs = make_requests(8, seed=14, alpha=1.05)
+    eng.serve(reqs)
+    eng.fail_mn(0)
+    eng.fail_mn(3)
+    eng.replan_placement()
+    for tid, reps in eng.alloc.replicas.items():
+        assert not set(reps) & eng.dead
+        assert len(reps) == 2            # replication held on survivors
+    res, st = eng.serve(reqs)
+    assert st.completed == len(reqs)
+
+
+def test_replan_placement_uses_measured_hotness(model_and_params):
+    """After serving a skewed stream, replanning placement from measured
+    hotness keeps serving bitwise-identically (placement moves bytes,
+    never values) and re-syncs cache coherence."""
+    model, params = model_and_params
+    reqs = make_requests(10, seed=12, alpha=1.05)
+    base = make_engine(model, params, cache_mb=0.0,
+                       mn_types=["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"])
+    res_b, _ = base.serve(reqs)
+    eng = make_engine(model, params, cache_mb=1.0,
+                      mn_types=["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"])
+    eng.serve(reqs)
+    eng.replan_placement()
+    for tid, reps in eng.alloc.replicas.items():   # still class-spanning
+        assert {("nmp" if eng.mn_nmp[j] else "ddr") for j in reps} == \
+            {"ddr", "nmp"}
+    res_c, st = eng.serve(reqs)
+    want = {r.rid: r.outputs for r in res_b}
+    for r in res_c:
+        assert np.array_equal(r.outputs, want[r.rid])

@@ -1,0 +1,56 @@
+"""Golden regression for the hot-row cache headline (issue #4 satellite).
+
+`benchmarks.bench_cache.run(smoke=True)` serves the same Zipf-skewed
+stream uncached and with a 64 MB per-CN RowCache over a 128 MB table
+pool.  The acceptance claim is >30% gather-byte reduction at Zipf
+alpha=1.05 with the 64 MB budget; the measured smoke point lands near
+59% hit rate / 59% gather reduction / 33% p99 reduction, and the
+uniform (alpha=0) stream must stay near zero — the saving comes from
+skew, not from accounting.  Bands are pinned (mirroring
+`test_nmp_golden.py`) so cache/accounting edits cannot silently drift
+the headline; bitwise parity is asserted by the bench itself.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import bench_cache  # noqa: E402
+
+HOT = (1.05, 64.0)
+COLD = (0.0, 64.0)
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    return bench_cache.run(smoke=True)
+
+
+def test_smoke_covers_the_pinned_points(sweep):
+    assert HOT in sweep and COLD in sweep
+    assert all(v["bitwise"] for v in sweep.values())
+
+
+def test_hot_point_hit_rate_band(sweep):
+    hr = sweep[HOT]["hit_rate"]
+    assert 0.45 <= hr <= 0.80, f"alpha=1.05/64MB hit rate drifted: {hr:.3f}"
+
+
+def test_hot_point_gather_reduction_band(sweep):
+    red = sweep[HOT]["reduction"]
+    assert red > 0.30, f"headline claim broken: {red:.2%} <= 30%"
+    assert red <= 0.80, f"implausibly high reduction: {red:.2%}"
+
+
+def test_hot_point_p99_reduction(sweep):
+    drop = sweep[HOT]["p99_drop"]
+    assert 0.10 <= drop <= 0.60, f"p99 reduction drifted: {drop:.2%}"
+
+
+def test_uniform_stream_barely_benefits(sweep):
+    """alpha=0 leaves only intra-stream duplicate hits: if the uniform
+    stream shows a large reduction, the accounting is lying about skew."""
+    assert sweep[COLD]["reduction"] < 0.10
+    assert sweep[COLD]["hit_rate"] < 0.10

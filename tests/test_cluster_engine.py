@@ -276,6 +276,34 @@ def test_cluster_nmp_latency_model_regression(model_and_params):
     assert 0.3 < v["mn_stage_ratio"] < 2.0
 
 
+def test_serve_deterministic_across_runs(model_and_params):
+    """Seed standardization (issue #4 satellite): building the stream
+    from `dlrm_request_stream(seed)` and the engine from
+    `ClusterConfig.seed` twice must reproduce the *entire* ClusterStats
+    byte-for-byte — scores, latencies, and every counter."""
+    import dataclasses
+    from repro.data.queries import QueryDist, dlrm_request_stream
+    model, params = model_and_params
+
+    def one_run():
+        qd = QueryDist(mean_size=5.0, max_size=24, alpha=1.05)
+        reqs = [Request(*t) for t in
+                dlrm_request_stream(CFG, 14, seed=42, dist=qd,
+                                    gap_s=0.005)]
+        eng = ClusterEngine(model, params, ClusterConfig(
+            n_cn=2, m_mn=4, batch_size=16, n_replicas=2, seed=42,
+            cache_mb=0.01))
+        res, st = eng.serve(reqs, failures=[(0.03, 1)])
+        return res, st
+
+    res_a, st_a = one_run()
+    res_b, st_b = one_run()
+    assert dataclasses.asdict(st_a) == dataclasses.asdict(st_b)
+    for a, b in zip(res_a, res_b):
+        assert a.rid == b.rid and a.latency == b.latency
+        assert np.array_equal(a.outputs, b.outputs)
+
+
 def test_batcher_parts_conservation():
     """Batch.parts records exactly each query's row contribution."""
     b = Batcher(batch_size=16)

@@ -8,6 +8,15 @@ Across random {n CN, m MN, replication, DDR/NMP mix} configurations:
   sum to the batch's rows);
 - an MN failure + re-route preserves bitwise outputs.
 
+Hot-row cache properties (issue #4 satellite): for random query streams,
+failure times, and resize schedules, a cached engine's scores are
+bitwise-equal to the uncached engine's, and on DDR pools the byte
+accounting identity ``bytes_saved == uncached.gather - cached.gather``
+holds exactly (gather totals are occurrence counts there, so they are
+routing-invariant; the identity is checked whenever neither run had to
+re-issue a batch mid-MN-stage, the one event that changes the
+occurrence multiset between runs).
+
 Plain parametrized fallbacks cover pinned configs on bare environments
 (the hypothesis shim skips the property variants there).
 """
@@ -105,6 +114,44 @@ def _check_failure_preserves_outputs(n_cn, m_mn, nrep, nmp_count,
             assert dest != fail_mn
 
 
+def _check_cache_bitwise_and_bytes(n_cn, m_mn, alpha, cache_mb, policy,
+                                   fails, resizes, seed):
+    """Cached vs uncached on the same stream + failure/resize schedule:
+    scores must be bitwise-equal; on the all-DDR pool the byte identity
+    is exact unless an in-flight re-issue perturbed one run's
+    occurrence multiset (vanishingly rare — the MN stage is
+    microseconds against millisecond event times)."""
+    rng = np.random.RandomState(seed)
+    qd = QueryDist(mean_size=4.0, max_size=12, alpha=alpha)
+    sizes = qd.sample(rng, 10)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng, alpha=alpha)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.004 * i))
+    events = dict(failures=list(fails), resizes=list(resizes))
+    base = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=2))
+    res_b, st_b = base.serve(reqs, **events)
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=2,
+        cache_mb=cache_mb, cache_policy=policy))
+    res_c, st_c = eng.serve(reqs, **events)
+    assert st_c.completed == st_b.completed == len(reqs)
+    want = {r.rid: r.outputs for r in res_b}
+    for r in res_c:
+        assert np.array_equal(r.outputs, want[r.rid])
+    assert st_c.cache_bytes_saved == st_c.cache_hits * CFG.dlrm.embed_dim * 4
+    if st_b.reissues == st_c.reissues == 0:
+        gat_b = sum(st_b.mn_gather_bytes) + st_b.retired_gather_bytes
+        gat_c = sum(st_c.mn_gather_bytes) + st_c.retired_gather_bytes
+        assert st_c.cache_bytes_saved == gat_b - gat_c
+        mem_b = sum(st_b.mn_access_bytes) + st_b.retired_access_bytes
+        mem_c = sum(st_c.mn_access_bytes) + st_c.retired_access_bytes
+        assert st_c.cache_bytes_saved == mem_b - mem_c
+
+
 # --------------------------------------------------------- property form
 @settings(max_examples=10, deadline=None)
 @given(n_cn=st.integers(1, 3), m_mn=st.integers(2, 5),
@@ -123,6 +170,21 @@ def test_failure_reroute_bitwise_random_configs(m_mn, nmp_frac,
                                      fail_mn % m_mn, t_fail)
 
 
+@settings(max_examples=8, deadline=None)
+@given(alpha=st.floats(0.0, 1.3), cache_kb=st.integers(1, 64),
+       policy=st.sampled_from(["lru", "lfu"]),
+       fail_mn=st.integers(0, 3), t_fail=st.floats(0.0, 0.04),
+       resize_m=st.integers(3, 6), t_resize=st.floats(0.0, 0.04),
+       seed=st.integers(0, 99))
+def test_cache_bitwise_and_bytes_random_streams(alpha, cache_kb, policy,
+                                                fail_mn, t_fail,
+                                                resize_m, t_resize, seed):
+    _check_cache_bitwise_and_bytes(
+        2, 4, alpha, cache_kb / 1000.0, policy,
+        fails=[(t_fail, fail_mn)], resizes=[(t_resize, 2, resize_m)],
+        seed=seed)
+
+
 # ------------------------------------------------- pinned-config fallback
 @pytest.mark.parametrize("n_cn,m_mn,nrep,nmp_count", [
     (1, 2, 1, 0), (2, 4, 2, 2), (3, 5, 2, 5), (2, 3, 1, 1),
@@ -137,3 +199,15 @@ def test_routing_invariants_pinned(n_cn, m_mn, nrep, nmp_count):
 ])
 def test_failure_reroute_bitwise_pinned(m_mn, nmp_count, fail_mn):
     _check_failure_preserves_outputs(2, m_mn, 2, nmp_count, fail_mn, 0.02)
+
+
+@pytest.mark.parametrize("alpha,cache_mb,policy,fails,resizes,seed", [
+    (1.05, 0.008, "lru", [(0.015, 1)], [], 0),
+    (1.05, 0.008, "lfu", [], [(0.02, 2, 6)], 1),
+    (0.0, 0.002, "lru", [(0.01, 0)], [(0.025, 2, 3)], 2),
+    (1.2, 0.001, "lfu", [(0.03, 2)], [(0.012, 3, 5)], 3),
+])
+def test_cache_bitwise_and_bytes_pinned(alpha, cache_mb, policy,
+                                        fails, resizes, seed):
+    _check_cache_bitwise_and_bytes(2, 4, alpha, cache_mb, policy,
+                                   fails, resizes, seed)

@@ -55,6 +55,55 @@ def test_sharded_loader_disjoint_streams():
     np.testing.assert_array_equal(next(it0b)["dense"], b0["dense"])
 
 
+def test_zipf_indices_skewed_and_deterministic(rng):
+    idx = q.zipf_indices(rng, (64, 4, 16), num_rows=1000, alpha=1.05)
+    assert idx.dtype == np.int32
+    assert (idx >= 0).all() and (idx < 1000).all()
+    # the hot head: rank 0..99 (10% of rows) absorbs most of the mass
+    head = (idx < 100).mean()
+    assert head > 0.5
+    idx2 = q.zipf_indices(np.random.RandomState(0), (64, 4, 16), 1000, 1.05)
+    np.testing.assert_array_equal(idx, idx2)
+    # steeper skew concentrates harder
+    hotter = q.zipf_indices(np.random.RandomState(0), (64, 4, 16), 1000, 1.5)
+    assert (hotter < 100).mean() > head
+
+
+def test_dlrm_batch_alpha_zero_matches_legacy_stream():
+    """alpha=0 must preserve the exact uniform-hash RNG stream (seeded
+    goldens depend on it): the kwarg default cannot perturb sampling."""
+    cfg = configs.get_reduced("rm1")
+    a = q.dlrm_batch(cfg, 16, np.random.RandomState(3))
+    b = q.dlrm_batch(cfg, 16, np.random.RandomState(3), alpha=0.0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_dlrm_batch_zipf_mode(rng):
+    cfg = configs.get_reduced("rm1")
+    b = q.dlrm_batch(cfg, 64, rng, alpha=1.2)
+    r = cfg.dlrm
+    assert b["indices"].shape == (64, r.num_tables, r.avg_pooling)
+    valid = b["indices"][b["indices"] >= 0]
+    assert (valid < r.rows_per_table).all()
+    # hot head present: low row ids dominate the valid lookups
+    assert (valid < r.rows_per_table // 10).mean() > 0.4
+
+
+def test_dlrm_request_stream_seeded_and_reproducible():
+    cfg = configs.get_reduced("rm1")
+    qd = q.QueryDist(mean_size=6.0, max_size=16, alpha=1.05)
+    s1 = q.dlrm_request_stream(cfg, 8, seed=5, dist=qd, gap_s=0.001)
+    s2 = q.dlrm_request_stream(cfg, 8, seed=5, dist=qd, gap_s=0.001)
+    assert [t[0] for t in s1] == list(range(8))
+    for (i1, p1, n1, t1), (i2, p2, n2, t2) in zip(s1, s2):
+        assert (i1, n1, t1) == (i2, n2, t2)
+        np.testing.assert_array_equal(p1["indices"], p2["indices"])
+        np.testing.assert_array_equal(p1["dense"], p2["dense"])
+    s3 = q.dlrm_request_stream(cfg, 8, seed=6, dist=qd, gap_s=0.001)
+    assert not np.array_equal(s1[0][1]["dense"], s3[0][1]["dense"])
+
+
 @settings(max_examples=25, deadline=None)
 @given(mean=st.floats(2.0, 256.0), sigma=st.floats(0.1, 1.5),
        seed=st.integers(0, 999))
