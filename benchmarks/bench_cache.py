@@ -24,14 +24,11 @@ from __future__ import annotations
 import argparse
 import sys
 
-import numpy as np
-
 from repro.configs import rm1
 from repro.configs.base import DLRMConfig
-from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
-from repro.serving.cluster import ClusterConfig, ClusterEngine
-from repro.serving.engine import Request
+from repro.serving.scenario import (ScenarioSpec, Workload, plan_workload,
+                                    run_scenario, smoke_topology)
 
 from benchmarks.common import row
 
@@ -52,27 +49,30 @@ FULL_SIZES = (8.0, 64.0)
 SEED = 7
 
 
-def _requests(n: int, alpha: float):
+def _spec(n: int, alpha: float, cache_mb: float,
+          policy: str = "lru") -> ScenarioSpec:
     # batch-filling queries (sizes clip to batch_size) so batches form on
     # arrival and modeled latency is stage-dominated — the p99 delta then
-    # reads the G_S reduction instead of the ingress flush deadline
-    qd = QueryDist(mean_size=128.0, sigma=0.25, max_size=32, alpha=alpha)
-    return [Request(*t) for t in
-            dlrm_request_stream(CFG, n, seed=SEED, dist=qd, gap_s=0.0005)]
+    # reads the G_S reduction instead of the ingress flush deadline.
+    # use_kernel=False: jnp reference pooling — the interpret-mode Pallas
+    # bag costs time proportional to the resident shard size, which this
+    # bench makes deliberately large (128 MB of tables) so the 64 MB
+    # budget binds.  The cache layer is kernel-agnostic — byte/hit
+    # accounting is identical on both paths, and kernel-vs-ref bitwise
+    # parity is pinned separately by the cache test suite.
+    return ScenarioSpec(
+        name=f"cache-a{alpha:g}-mb{cache_mb:g}",
+        topology=smoke_topology(use_kernel=False, cache_mb=cache_mb,
+                                cache_policy=policy),
+        workload=Workload(requests=n, mean_size=128.0, sigma=0.25,
+                          max_size=32, alpha=alpha, gap_s=0.0005,
+                          seed=SEED))
 
 
-def _serve(model, params, reqs, cache_mb: float, policy: str = "lru"):
-    # jnp reference pooling: the interpret-mode Pallas bag costs time
-    # proportional to the resident shard size, which this bench makes
-    # deliberately large (128 MB of tables) so the 64 MB budget binds.
-    # The cache layer is kernel-agnostic — byte/hit accounting is
-    # identical on both paths, and kernel-vs-ref bitwise parity is
-    # pinned separately by the cache test suite on small configs.
-    eng = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2, seed=SEED,
-        use_kernel=False, cache_mb=cache_mb, cache_policy=policy))
-    res, st = eng.serve(reqs)
-    return res, st
+def _serve(model, params, n, alpha, cache_mb: float, stream=None,
+           policy: str = "lru"):
+    return run_scenario(_spec(n, alpha, cache_mb, policy),
+                        model=model, params=params, stream=stream)
 
 
 def run(smoke: bool = False) -> dict:
@@ -83,15 +83,18 @@ def run(smoke: bool = False) -> dict:
     sizes = SMOKE_SIZES if smoke else FULL_SIZES
     out = {}
     for alpha in alphas:
-        reqs = _requests(n_req, alpha)
-        res_u, st_u = _serve(model, params, reqs, cache_mb=0.0)
-        want = {r.rid: r.outputs for r in res_u}
+        # one seeded stream per alpha, shared by the uncached baseline
+        # and every cache size (the specs differ only in topology)
+        stream = plan_workload(_spec(n_req, alpha, 0.0), CFG)
+        rep_u = _serve(model, params, n_req, alpha, cache_mb=0.0,
+                       stream=stream)
+        st_u = rep_u.stats
         gat_u = sum(st_u.mn_gather_bytes)
         for mb in sizes:
-            res_c, st_c = _serve(model, params, reqs, cache_mb=mb)
-            bitwise = (st_c.completed == len(reqs)
-                       and all(np.array_equal(r.outputs, want[r.rid])
-                               for r in res_c))
+            rep_c = _serve(model, params, n_req, alpha, cache_mb=mb,
+                           stream=stream)
+            st_c = rep_c.stats
+            bitwise = rep_c.bitwise_equal(rep_u)
             if not bitwise:
                 raise AssertionError(
                     f"cache broke score parity (alpha={alpha}, {mb}MB)")

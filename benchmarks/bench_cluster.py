@@ -1,69 +1,98 @@
 """ClusterEngine end-to-end: multi-unit routed serving (paper §IV/§V).
 
-Serves a reduced-RM1 query stream through the real-JAX ClusterEngine at
-{2 CN, 4 MN} with 2x replication, once clean and once with an MN killed
-mid-stream, and reports the routed-access imbalance plus the latency
-cross-check against the analytic serving-unit model.
+Serves a reduced-RM1 query stream through the scenario front door
+(``serving.scenario.run_scenario``) at {2 CN, 4 MN} with 2x replication
+— once clean, once with an MN killed mid-stream (a ``FailMN`` event),
+and once on the heterogeneous DDR+NMP pool — and reports the
+routed-access imbalance plus the latency cross-check against the
+analytic serving-unit model.
+
+  PYTHONPATH=src python -m benchmarks.bench_cluster [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import sys
+
 from repro import configs
-from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
-from repro.serving.cluster import ClusterConfig, ClusterEngine
-from repro.serving.engine import Request
+from repro.serving.scenario import (FailMN, ScenarioSpec, Workload,
+                                    run_scenario, smoke_topology)
 
 from benchmarks.common import row, time_call
 
 
-def _requests(cfg, n, seed=0):
-    return [Request(*t) for t in dlrm_request_stream(
-        cfg, n, seed=seed, dist=QueryDist(mean_size=8.0, max_size=64))]
+def _specs(n_req: int):
+    clean = ScenarioSpec(
+        name="cluster-clean",
+        topology=smoke_topology(),
+        workload=Workload(requests=n_req, seed=0))
+    failure = ScenarioSpec(
+        name="cluster-mn-fail",
+        topology=smoke_topology(),
+        workload=Workload(requests=n_req, seed=0),
+        events=(FailMN(0.03, mn=1),))
+    hetero = ScenarioSpec(
+        name="cluster-hetero",
+        topology=smoke_topology(
+            mn_types=("ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn")),
+        workload=Workload(requests=n_req, seed=0))
+    return clean, failure, hetero
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     cfg = configs.get_reduced("rm1")
     model = DLRMModel(cfg)
     params = model.init(0)
-    reqs = _requests(cfg, 32, seed=0)
+    n_req = 16 if smoke else 32
+    clean, failure, hetero = _specs(n_req)
     out = {}
 
-    cc = ClusterConfig(n_cn=2, m_mn=4, batch_size=32, n_replicas=2)
     us = time_call(
-        lambda: ClusterEngine(model, params, cc).serve(reqs),
+        lambda: run_scenario(clean, model=model, params=params),
         reps=1, warmup=1)
-    eng = ClusterEngine(model, params, cc)
-    _, st = eng.serve(reqs)
-    v = eng.validate_latency_model()
-    row("cluster_serve_32q_us", us,
+    rep = run_scenario(clean, model=model, params=params)
+    st = rep.stats
+    v = rep.latency_model
+    row(f"cluster_serve_{n_req}q_us", us,
         f"p95_ms={st.p95 * 1e3:.3f},imbalance={st.imbalance:.3f},"
         f"lat_model_ratio={v['ratio']:.2f}")
     out["clean"] = st
 
     us_f = time_call(
-        lambda: ClusterEngine(model, params, cc).serve(
-            reqs, failures=[(0.03, 1)]),
+        lambda: run_scenario(failure, model=model, params=params),
         reps=1, warmup=1)
-    engf = ClusterEngine(model, params, cc)
-    _, stf = engf.serve(reqs, failures=[(0.03, 1)])
+    repf = run_scenario(failure, model=model, params=params)
+    stf = repf.stats
     row("cluster_serve_mn_fail_us", us_f,
-        f"completed={stf.completed}/32,reroutes={stf.reroutes},"
+        f"completed={stf.completed}/{n_req},reroutes={stf.reroutes},"
         f"reinits={stf.reinits}")
     out["failure"] = stf
 
     # heterogeneous pool: NMP MNs pool on-node, ship only Fsum vectors
-    cch = ClusterConfig(n_cn=2, m_mn=4, batch_size=32, n_replicas=2,
-                        mn_types=["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"])
     us_h = time_call(
-        lambda: ClusterEngine(model, params, cch).serve(reqs),
+        lambda: run_scenario(hetero, model=model, params=params),
         reps=1, warmup=1)
-    engh = ClusterEngine(model, params, cch)
-    _, sth = engh.serve(reqs)
+    reph = run_scenario(hetero, model=model, params=params)
+    sth = reph.stats
     gat_ddr = sum(st.mn_gather_bytes)
     gat_het = sum(sth.mn_gather_bytes)
     row("cluster_serve_hetero_us", us_h,
         f"gather_bytes={gat_het:.0f} (ddr pool {gat_ddr:.0f}, "
         f"{100 * (1 - gat_het / gat_ddr):.1f}% saved),"
-        f"lat_model_ratio={engh.validate_latency_model()['ratio']:.2f}")
+        f"lat_model_ratio={reph.latency_model['ratio']:.2f}")
     out["hetero"] = sth
     return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small request stream (CI)")
+    args = p.parse_args(argv)
+    run(smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

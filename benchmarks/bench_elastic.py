@@ -26,30 +26,21 @@ from __future__ import annotations
 import argparse
 import sys
 
-import numpy as np
-
 from repro import configs
 from repro.configs import rm1
 from repro.core import allocator, hardware as hw
 from repro.core.serving_unit import UnitSpec
-from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
 from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
                                       energy_joules, idle_node_hours)
-from repro.serving.cluster import ClusterConfig, ClusterEngine
-from repro.serving.engine import Request
+from repro.serving.scenario import (Resize, ScenarioSpec, Workload,
+                                    run_scenario, smoke_topology)
 
 from benchmarks.common import row
 
 PEAK_LOAD = 2e5
 STEPS = 96
 LIFETIME_DAYS = 365.0 * hw.LIFETIME_YEARS
-
-
-def _requests(cfg, n, seed=0, gap_s=0.002):
-    return [Request(*t) for t in dlrm_request_stream(
-        cfg, n, seed=seed,
-        dist=QueryDist(mean_size=8.0, max_size=64), gap_s=gap_s)]
 
 
 def run(smoke: bool = False) -> dict:
@@ -105,34 +96,39 @@ def run(smoke: bool = False) -> dict:
     out["idle_units"] = plan.idle_units
 
     # ---- 3. executable slice: resizes on a real stream ---------------
+    # both runs go through the scenario front door on the shared smoke
+    # topology: a fixed-peak spec with an empty timeline vs the same
+    # spec carrying the autoscaler's plan as typed Resize events
     cfg = configs.get_reduced("rm1")
     model = DLRMModel(cfg)
     params = model.init(0)
     n_req = 16 if smoke else 48
-    reqs = _requests(cfg, n_req, seed=0)
     span = 0.002 * n_req
     # map the diurnal day onto the stream with a toy policy whose peak
     # saturates the fixed pool below
     toy = Autoscaler(AutoscalerConfig(
         qps_per_cn=1.0, qps_per_mn=0.5, min_cn=1, min_mn=2,
         max_cn=3, max_mn=6))
-    events = toy.plan(peak_load=3.0, duration_s=span,
-                      steps=6 if smoke else 12)
-    cc = ClusterConfig(n_cn=3, m_mn=6, batch_size=32, n_replicas=2)
+    events = tuple(Resize(e.time_s, n_cn=e.n_cn, m_mn=e.m_mn)
+                   for e in toy.plan(peak_load=3.0, duration_s=span,
+                                     steps=6 if smoke else 12))
+    topo = smoke_topology(n_cn=3, m_mn=6)
+    wl = Workload(requests=n_req, seed=0)
 
-    fixed_eng = ClusterEngine(model, params, cc)
-    res_fixed, st_fixed = fixed_eng.serve(reqs)
-    el_eng = ClusterEngine(model, params, cc)
-    res_el, st_el = el_eng.serve(reqs, resizes=list(events))
+    rep_fixed = run_scenario(
+        ScenarioSpec(name="elastic-fixed", topology=topo, workload=wl),
+        model=model, params=params)
+    rep_el = run_scenario(
+        ScenarioSpec(name="elastic-diurnal", topology=topo, workload=wl,
+                     events=events),
+        model=model, params=params)
+    st_fixed, st_el = rep_fixed.stats, rep_el.stats
 
-    want = {r.rid: r.outputs for r in res_fixed}
-    bitwise = (st_el.completed == len(reqs)
-               and all(np.array_equal(r.outputs, want[r.rid])
-                       for r in res_el))
+    bitwise = rep_el.bitwise_equal(rep_fixed)
     row("elastic_engine_bitwise", float(bitwise),
         f"{st_el.resizes} resizes over {n_req} queries, pool "
-        f"{{{el_eng.n_cn} CN, {el_eng.m_mn} MN}} at end — scores "
-        f"identical to fixed {{3 CN, 6 MN}}: {bitwise}")
+        f"{{{rep_el.final_n_cn} CN, {rep_el.final_m_mn} MN}} at end — "
+        f"scores identical to fixed {{3 CN, 6 MN}}: {bitwise}")
     row("elastic_engine_migration_bytes", st_el.migration_bytes,
         f"shard bytes drained/topped-up across {st_el.resizes} resizes; "
         f"p95 {st_el.p95 * 1e3:.3f}ms vs fixed {st_fixed.p95 * 1e3:.3f}ms")

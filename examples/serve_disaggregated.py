@@ -3,24 +3,26 @@
 Runs the discrete-event cluster simulator for a {2 CN, 2 MN} serving
 unit under both scheduling policies (paper Fig. 8), then injects MN/CN
 failures and shows the recovery path (re-routing vs re-initialization),
-serves a real-JAX DLRM through the multi-unit ClusterEngine — killing an
-MN mid-stream to show live replica re-routing — and finally follows a
-diurnal autoscaling schedule that grows/shrinks both pools while the
-stream is in flight (paper Fig. 2b/11).
+and finally walks the declarative scenario library
+(``examples/scenarios/*.json``, built by ``serving.scenario.preset``)
+through the real-JAX ClusterEngine's single front door
+(``run_scenario``): a failover storm with timed recoveries, a diurnal
+elastic day (paper Fig. 2b/11), a skew-drift stream feeding the CN
+hot-row cache, and a heterogeneous DDR+NMP pool (Fig. 14) — each
+bitwise-identical to its event-free baseline.
 
 Run:  PYTHONPATH=src python examples/serve_disaggregated.py
 """
+import dataclasses
+
 import numpy as np
 
 from repro import configs
 from repro.core import embedding_manager as em
 from repro.core.scheduler import INTERLEAVED, SEQUENTIAL
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
-from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models.dlrm import DLRMModel
-from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
-from repro.serving.cluster import ClusterConfig, ClusterEngine
-from repro.serving.engine import Request
+from repro.serving.scenario import FailMN, RecoverMN, preset, run_scenario
 from repro.serving.simulator import ClusterSim, SimConfig
 
 
@@ -60,83 +62,82 @@ def main():
     print(f"  lost MN 1 -> reinit={reinit}; surviving-MN access imbalance "
           f"{em.imbalance([a for i, a in enumerate(routing.mn_access) if i != 1]):.3f}")
 
-    print("— real-JAX ClusterEngine: {2 CN, 4 MN}, MN 1 dies mid-stream —")
+    # one model/params pair shared by every scenario below, so the
+    # cross-scenario bitwise claims compare like with like
     cfg = configs.get_reduced("rm1")
     model = DLRMModel(cfg)
     params = model.init(0)
-    engine = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2))
-    reqs = [Request(*t) for t in dlrm_request_stream(
-        cfg, 40, seed=1, dist=QueryDist(mean_size=8.0, max_size=64))]
-    results, st = engine.serve(reqs, failures=[(0.04, 1)])
-    print(f"  completed {st.completed}/{len(reqs)} queries, "
-          f"{len(reqs) - st.completed} dropped; p95 {st.p95 * 1e3:.2f}ms")
-    print(f"  MN failure at t=40ms -> reroutes={st.reroutes} "
-          f"(replica fast path), reinit={st.reinits}; "
-          f"surviving-MN access imbalance {st.imbalance:.3f}")
-    v = engine.validate_latency_model()
+
+    print("— scenario: failover storm (timed failures AND recoveries) —")
+    spec = preset("failover_storm")
+    rep = run_scenario(spec, model=model, params=params)
+    clean = run_scenario(dataclasses.replace(spec, events=()),
+                         model=model, params=params)
+    print(f"  completed {rep.completed}/{rep.total}; "
+          f"p95 {rep.stats.p95 * 1e3:.2f}ms; "
+          f"failures={rep.stats.failures} recoveries={rep.stats.recoveries} "
+          f"reroutes={rep.stats.reroutes}")
+    for rec in rep.stats.events:
+        print(f"  @{rec.time_s * 1e3:5.1f}ms {rec.event.kind:<11s} "
+              f"mn={getattr(rec.event, 'mn', '-')} -> dead={list(rec.dead)}")
+    print(f"  scores bitwise-identical to the event-free run: "
+          f"{rep.bitwise_equal(clean)}")
+    v = rep.latency_model
     print(f"  latency accounting vs analytic unit model: "
           f"ratio {v['ratio']:.2f}")
 
-    print("— heterogeneous pool: 2 DDR + 2 NMP memory nodes (Fig. 14) —")
-    het = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2,
-        mn_types=["ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"]))
-    res_h, st_h = het.serve(reqs)
-    same = all(np.array_equal(a.outputs, b.outputs)
-               for a, b in zip(sorted(results, key=lambda r: r.rid),
-                               sorted(res_h, key=lambda r: r.rid)))
-    mem, gat = sum(st_h.mn_access_bytes), sum(st_h.mn_gather_bytes)
-    print(f"  scores bitwise-identical to the DDR pool: {same}")
-    nb = max(het.batches_seen, 1)
-    for j, t in enumerate(st_h.mn_types):
-        print(f"  MN{j} [{t:6s}] scanned {st_h.mn_access_bytes[j] / 1e3:8.1f}KB "
-              f"shipped {st_h.mn_gather_bytes[j] / 1e3:8.1f}KB "
-              f"mean modeled G_S {het.mn_stage_s[j] / nb * 1e6:.2f}us/batch")
-    print(f"  fabric traffic {gat / 1e6:.2f}MB vs {mem / 1e6:.2f}MB raw "
-          f"({100 * (1 - gat / mem):.1f}% gather bytes saved on NMP shards)")
-
-    print("— elastic autoscaling: diurnal resize schedule (Fig. 2b/11) —")
-    span = 0.002 * len(reqs)
-    toy = Autoscaler(AutoscalerConfig(        # {2 CN, 4 MN} is the peak
-        qps_per_cn=0.5, qps_per_mn=0.25, min_cn=1, min_mn=2,
-        max_cn=2, max_mn=4))
-    events = toy.plan(peak_load=0.95, duration_s=span, steps=8)
-    el = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2))
-    res_e, st_e = el.serve(reqs, resizes=events)
-    same = all(np.array_equal(a.outputs, b.outputs)
-               for a, b in zip(sorted(results, key=lambda r: r.rid),
-                               sorted(res_e, key=lambda r: r.rid)))
-    sched = " -> ".join(f"{{{e.n_cn},{e.m_mn}}}@{e.time_s * 1e3:.0f}ms"
-                        for e in events)
+    print("— scenario: diurnal elastic day (Fig. 2b/11) —")
+    spec = preset("diurnal_elastic")
+    rep = run_scenario(spec, model=model, params=params)
+    fixed = run_scenario(dataclasses.replace(spec, events=()),
+                         model=model, params=params)
+    sched = " -> ".join(
+        f"{{{r.event.n_cn},{r.event.m_mn}}}@{r.time_s * 1e3:.0f}ms"
+        for r in rep.stats.events)
     print(f"  schedule: {sched}")
-    print(f"  {st_e.resizes} resizes applied, "
-          f"{st_e.migration_bytes / 1e3:.1f}KB shard migration drained "
-          f"to survivors; pool now {{{el.n_cn} CN, {el.m_mn} MN}}")
-    print(f"  scores bitwise-identical to the fixed {{2 CN, 4 MN}} "
-          f"pool: {same}")
+    print(f"  {rep.stats.resizes} resizes applied, "
+          f"{rep.stats.migration_bytes / 1e3:.1f}KB shard migration "
+          f"drained to survivors; pool now "
+          f"{{{rep.final_n_cn} CN, {rep.final_m_mn} MN}}")
+    print(f"  scores bitwise-identical to the fixed "
+          f"{{{fixed.final_n_cn} CN, {fixed.final_m_mn} MN}} pool: "
+          f"{rep.bitwise_equal(fixed)}")
 
-    print("— skew-aware CN hot-row cache (Zipf alpha=1.05, Gupta et al.) —")
-    sreqs = [Request(*t) for t in dlrm_request_stream(
-        cfg, 40, seed=1, dist=QueryDist(mean_size=8.0, max_size=64,
-                                        alpha=1.05))]
-    base = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2))
-    res_b, st_b = base.serve(sreqs)
-    cached = ClusterEngine(model, params, ClusterConfig(
-        n_cn=2, m_mn=4, batch_size=32, n_replicas=2, cache_mb=16))
-    res_k, st_k = cached.serve(sreqs, failures=[(0.04, 1)])
-    same = all(np.array_equal(a.outputs, b.outputs)
-               for a, b in zip(sorted(res_b, key=lambda r: r.rid),
-                               sorted(res_k, key=lambda r: r.rid)))
+    print("— scenario: skew drift + CN hot-row cache (Gupta et al.) —")
+    spec = preset("skew_drift")
+    rep = run_scenario(spec, model=model, params=params)
+    for ph in rep.phases:
+        print(f"  phase {ph.index} @{ph.t_start * 1e3:3.0f}ms "
+              f"alpha={ph.alpha:<4g} gap={ph.gap_s * 1e3:g}ms: "
+              f"{ph.completed}/{ph.requests} completed, "
+              f"p95 {ph.p95 * 1e3:.2f}ms")
+    st_k = rep.stats
     probes = st_k.cache_hits + st_k.cache_misses
-    print(f"  {100 * st_k.cache_hits / max(probes, 1):.1f}% hit rate -> "
-          f"{st_k.cache_bytes_saved / 1e6:.2f}MB gather bytes stayed on "
-          f"the CN ({sum(st_b.mn_gather_bytes) / 1e6:.2f}MB uncached)")
-    print(f"  MN 1 died mid-stream: {st_k.cache_invalidations} rows "
-          f"invalidated (the tables whose serving copy moved), scores "
-          f"still bitwise-identical to the uncached clean run: {same}")
+    print(f"  {100 * st_k.cache_hits / max(probes, 1):.1f}% hit rate as "
+          f"the stream drifts uniform -> alpha=1.2 "
+          f"({st_k.cache_bytes_saved / 1e3:.1f}KB gather bytes stayed "
+          f"on the CN)")
+
+    print("— scenario: mixed DDR+NMP pool, fail/recover/grow (Fig. 14) —")
+    spec = preset("mixed_ddr_nmp")
+    rep = run_scenario(spec, model=model, params=params)
+    base = run_scenario(dataclasses.replace(
+        spec, events=tuple(e for e in spec.events
+                           if isinstance(e, (FailMN, RecoverMN)))),
+        model=model, params=params)
+    st_h = rep.stats
+    mem = sum(st_h.mn_access_bytes) + st_h.retired_access_bytes
+    gat = sum(st_h.mn_gather_bytes) + st_h.retired_gather_bytes
+    for j, t in enumerate(st_h.mn_types):
+        print(f"  MN{j} [{t:6s}] scanned "
+              f"{st_h.mn_access_bytes[j] / 1e3:8.1f}KB "
+              f"shipped {st_h.mn_gather_bytes[j] / 1e3:8.1f}KB")
+    print(f"  fabric traffic {gat / 1e6:.2f}MB vs {mem / 1e6:.2f}MB raw "
+          f"({100 * (1 - gat / mem):.1f}% gather bytes saved on NMP "
+          f"shards); pool grew to {{{rep.final_n_cn} CN, "
+          f"{rep.final_m_mn} MN}} mid-stream")
+    print(f"  scores bitwise-identical to the un-grown pool: "
+          f"{rep.bitwise_equal(base)}")
 
 
 if __name__ == "__main__":

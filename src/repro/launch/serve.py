@@ -1,6 +1,8 @@
 """Serving driver: disaggregated DLRM scoring or LM generation.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --requests 64
+  PYTHONPATH=src python -m repro.launch.serve \
+      --scenario examples/scenarios/failover_storm.json   # declarative
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --cns 2 --mns 4 --fail-mn 1
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
@@ -10,22 +12,78 @@
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --alpha 1.05 --cache-mb 64             # skewed stream + CN row cache
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
+
+Cluster serving goes through the declarative scenario API
+(``serving.scenario.run_scenario``): ``--scenario path.json`` runs a
+scenario file directly, and the legacy flag combinations are kept as a
+preset builder (`spec_from_flags`) that assembles the equivalent
+``ScenarioSpec`` — one front door either way.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-import jax
 import numpy as np
 
 from repro import configs
 from repro.data.queries import QueryDist, dlrm_request_stream
 from repro.models import registry
 from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
-from repro.serving.cluster import (ClusterConfig, ClusterEngine,
-                                   parse_mn_types)
+from repro.serving.cluster import parse_mn_types
 from repro.serving.engine import DLRMServingEngine, LMServingEngine, Request
+from repro.serving.scenario import (FailMN, ModelRef, Resize, ScenarioSpec,
+                                    Topology, Workload, run_scenario)
+
+
+def spec_from_flags(args) -> ScenarioSpec:
+    """The legacy CLI flags, expressed as a ScenarioSpec — the ad-hoc
+    flag combinations are now just a preset builder over the scenario
+    API."""
+    mn_types = tuple(parse_mn_types(args.mn_type, args.mns))
+    events = []
+    if args.fail_mn is not None:
+        events.append(FailMN(0.001 * args.requests / 2, mn=args.fail_mn))
+    if args.elastic:
+        # one diurnal day mapped onto the stream; the CLI pool sizes are
+        # the peak the trough scales down from
+        toy = Autoscaler(AutoscalerConfig(
+            qps_per_cn=1.0 / args.cns, qps_per_mn=1.0 / args.mns,
+            min_cn=1, min_mn=min(2, args.mns),
+            max_cn=args.cns, max_mn=args.mns))
+        events += [Resize(e.time_s, n_cn=e.n_cn, m_mn=e.m_mn)
+                   for e in toy.plan(peak_load=0.95,
+                                     duration_s=0.001 * args.requests,
+                                     steps=8)]
+    return ScenarioSpec(
+        name="cli",
+        description="scenario assembled from repro.launch.serve flags",
+        model=ModelRef(arch=args.arch, reduced=args.reduced,
+                       init_seed=args.seed),
+        topology=Topology(
+            n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
+            n_replicas=args.replicas, use_kernel=args.use_kernel,
+            mn_types=mn_types, cache_mb=args.cache_mb,
+            cache_policy=args.cache_policy),
+        workload=Workload(requests=args.requests, mean_size=8.0,
+                          max_size=4 * args.batch, alpha=args.alpha,
+                          gap_s=0.001, seed=args.seed),
+        events=tuple(events),
+    )
+
+
+def _print_report(rep) -> None:
+    """One renderer for both cluster entry points: the scenario report's
+    own summary, prefixed by the scored-output line only the flags path
+    has reason to surface."""
+    if rep.results:
+        scores = np.concatenate([r.outputs for r in rep.results])
+        print(f"[serve] scored {rep.completed}/{rep.total} queries "
+              f"({scores.size} samples), mean CTR {scores.mean():.4f}")
+    else:
+        print(f"[serve] scored 0/{rep.total} queries (empty stream)")
+    for line in rep.summary():
+        print(line)
 
 
 def main(argv=None):
@@ -37,6 +95,10 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=64)
     p.add_argument("--decode-steps", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--scenario", default=None, metavar="PATH",
+                   help="run a declarative scenario file "
+                        "(examples/scenarios/*.json) through "
+                        "run_scenario — ignores the other cluster flags")
     p.add_argument("--cluster", action="store_true",
                    help="serve across {n CN, m MN} via ClusterEngine")
     p.add_argument("--cns", type=int, default=2)
@@ -64,6 +126,14 @@ def main(argv=None):
                    default=True)
     args = p.parse_args(argv)
 
+    if args.scenario:
+        spec = ScenarioSpec.load(args.scenario)
+        rep = run_scenario(spec)
+        if spec.description:
+            print(f"[serve] scenario {spec.name!r}: {spec.description}")
+        _print_report(rep)
+        return 0
+
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))
     model = registry.build(cfg)
@@ -71,68 +141,16 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
 
     if cfg.family == "dlrm":
-        qd = QueryDist(mean_size=8.0, max_size=4 * args.batch,
-                       alpha=args.alpha)
-        reqs = [Request(*t) for t in
-                dlrm_request_stream(cfg, args.requests, seed=args.seed,
-                                    dist=qd, gap_s=0.001)]
         if args.cluster:
-            mn_types = parse_mn_types(args.mn_type, args.mns)
-            engine = ClusterEngine(model, params, ClusterConfig(
-                n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
-                n_replicas=args.replicas, use_kernel=args.use_kernel,
-                mn_types=mn_types, cache_mb=args.cache_mb,
-                cache_policy=args.cache_policy, seed=args.seed))
-            failures = ([] if args.fail_mn is None
-                        else [(0.001 * args.requests / 2, args.fail_mn)])
-            resizes = []
-            if args.elastic:
-                # one diurnal day mapped onto the stream; the CLI pool
-                # sizes are the peak the trough scales down from
-                toy = Autoscaler(AutoscalerConfig(
-                    qps_per_cn=1.0 / args.cns, qps_per_mn=1.0 / args.mns,
-                    min_cn=1, min_mn=min(2, args.mns),
-                    max_cn=args.cns, max_mn=args.mns))
-                resizes = toy.plan(peak_load=0.95,
-                                   duration_s=0.001 * args.requests,
-                                   steps=8)
-            results, stats = engine.serve(reqs, failures=failures,
-                                          resizes=resizes)
-            scores = np.concatenate([r.outputs for r in results])
-            pool = ",".join(mn_types)
-            print(f"[serve] cluster {{{args.cns} CN, {args.mns} MN "
-                  f"[{pool}]}} scored {stats.completed} queries "
-                  f"({scores.size} samples), mean CTR {scores.mean():.4f}")
-            print(f"[serve] p50 {stats.p50 * 1e3:.3f}ms "
-                  f"p95 {stats.p95 * 1e3:.3f}ms  "
-                  f"MN imbalance {stats.imbalance:.3f}  "
-                  f"failures={stats.failures} reroutes={stats.reroutes}")
-            mem = sum(stats.mn_access_bytes) + stats.retired_access_bytes
-            gat = sum(stats.mn_gather_bytes) + stats.retired_gather_bytes
-            if any(engine.mn_nmp):
-                print(f"[serve] NMP near-memory pooling: scanned "
-                      f"{mem / 1e6:.2f}MB on-node, shipped "
-                      f"{gat / 1e6:.2f}MB over the fabric "
-                      f"({100 * (1 - gat / max(mem, 1)):.1f}% gather "
-                      f"bytes saved vs raw rows)")
-            if args.cache_mb > 0:
-                probes = stats.cache_hits + stats.cache_misses
-                hr = stats.cache_hits / max(probes, 1)
-                print(f"[serve] hot-row cache ({args.cache_policy}, "
-                      f"{args.cache_mb:g}MB/CN): {100 * hr:.1f}% hit rate, "
-                      f"{stats.cache_bytes_saved / 1e6:.2f}MB gather "
-                      f"bytes saved, {stats.cache_evictions} evictions, "
-                      f"{stats.cache_invalidations} coherence "
-                      f"invalidations")
-            if args.elastic:
-                print(f"[serve] elastic: {stats.resizes} resizes applied, "
-                      f"{stats.migration_bytes / 1e6:.2f}MB shard "
-                      f"migration, pool now {{{engine.n_cn} CN, "
-                      f"{engine.m_mn} MN}}")
-            v = engine.validate_latency_model()
-            print(f"[serve] latency model cross-check: engine/analytic "
-                  f"= {v['ratio']:.2f} (MN stage {v['mn_stage_ratio']:.2f})")
+            spec = spec_from_flags(args)
+            rep = run_scenario(spec, model=model, params=params)
+            _print_report(rep)
         else:
+            qd = QueryDist(mean_size=8.0, max_size=4 * args.batch,
+                           alpha=args.alpha)
+            reqs = [Request(*t) for t in
+                    dlrm_request_stream(cfg, args.requests, seed=args.seed,
+                                        dist=qd, gap_s=0.001)]
             engine = DLRMServingEngine(model, params, batch_size=args.batch,
                                        use_kernel=args.use_kernel)
             results = engine.serve(reqs)

@@ -5,6 +5,9 @@ engine.*ServingEngine — real-JAX single-unit engines
 cluster.ClusterEngine — real-JAX multi-unit engine with replica routing
 autoscaler.Autoscaler — diurnal elastic-resize policy for the engine
 cache.RowCache        — per-CN hot-row embedding cache (LRU/LFU)
+scenario.ScenarioSpec — declarative scenarios: typed event timelines,
+                        JSON serde, presets, run_scenario front door
+timeline.TimelineDispatcher — serve()'s unified event-queue executor
 """
 from repro.serving.autoscaler import (Autoscaler,  # noqa: F401
                                       AutoscalerConfig, ResizeEvent)
@@ -13,4 +16,12 @@ from repro.serving.cluster import (ClusterConfig, ClusterEngine,  # noqa: F401
                                    ClusterStats)
 from repro.serving.engine import (DLRMServingEngine,  # noqa: F401
                                   LMServingEngine, Request, Result)
+from repro.serving.scenario import (FailMN, ModelRef,  # noqa: F401
+                                    RecoverMN, ReloadParams,
+                                    ReplanPlacement, Resize,
+                                    ScenarioReport, ScenarioSpec,
+                                    SetWorkload, Topology, Workload,
+                                    preset, run_scenario, smoke_topology)
 from repro.serving.simulator import ClusterSim, SimConfig  # noqa: F401
+from repro.serving.timeline import (EventRecord,  # noqa: F401
+                                    TimelineDispatcher)

@@ -35,6 +35,13 @@ when a table lost every replica.  ``serve`` accepts timed failure events;
 a failure landing inside a batch's MN stage re-issues that batch's lookups
 on the survivors — no query is ever dropped.
 
+Scenarios: ``serve`` consumes a typed event timeline — ``FailMN``,
+``RecoverMN`` (timed recoveries), ``Resize``, ``ReloadParams``,
+``ReplanPlacement``, ``SetWorkload`` — dispatched in global time order
+by ``serving.timeline``; the declarative front door is
+``serving.scenario.run_scenario(spec)``, and the legacy ``failures=`` /
+``resizes=`` kwargs are bitwise-identical shims over the same queue.
+
 Elasticity (§III, Fig. 2b/11): ``resize(n_cn, m_mn)`` grows or shrinks
 either pool independently while the engine keeps serving.  MN resizes go
 through the incremental migration planner
@@ -87,7 +94,6 @@ from repro.core import embedding_manager as em
 from repro.core import failure as fail_mod
 from repro.core import hardware as hw
 from repro.core.hardware import NODE_TYPES
-from repro.core.scheduler import Batch, Batcher, Query
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
 from repro.serving.cache import CacheStats, RowCache
 from repro.serving.engine import Request, Result
@@ -180,6 +186,11 @@ class ClusterStats:
     cache_evictions: int = 0
     cache_invalidations: int = 0  # rows dropped by coherence events
     cache_bytes_saved: float = 0.0      # gather bytes hits kept off the NIC
+    # per-event audit trail: serving.timeline.EventRecord entries in
+    # fire order — event, fire time, resulting pool shape.  Recoveries,
+    # resizes, reloads, and replans all appear here with real virtual-
+    # clock timestamps instead of being untimed method calls.
+    events: List = field(default_factory=list)
 
 
 class ClusterEngine:
@@ -596,240 +607,33 @@ class ClusterEngine:
     # ---------------------------------------------------------- serving
     def serve(self, requests: List[Request],
               failures: Sequence[Tuple[float, int]] = (),
-              resizes: Sequence[Tuple[float, int, int]] = ()
+              resizes: Sequence[Tuple[float, int, int]] = (),
+              events: Sequence = (),
               ) -> Tuple[List[Result], ClusterStats]:
-        """Serve a request stream; `failures` is [(time_s, mn_id), ...]
-        and `resizes` is [(time_s, n_cn, m_mn), ...] — timed elastic
-        resize events (e.g. from ``serving.autoscaler``), applied in
-        global time order with the failures at batch boundaries on the
-        virtual clock.  A resize's migration bytes stream in the
-        background and contend with the G_S gather path.
+        """Serve a request stream under a typed event timeline.
+
+        ``events`` is a sequence of ``serving.scenario`` events
+        (``FailMN``, ``RecoverMN``, ``Resize``, ``ReloadParams``,
+        ``ReplanPlacement``, ``SetWorkload``) consumed in global time
+        order by ``serving.timeline.TimelineDispatcher`` — see that
+        module for the ordering and batch-boundary/mid-stage semantics,
+        and ``serving.scenario.run_scenario`` for the declarative front
+        door that also builds the stream.
+
+        The legacy kwargs are thin shims kept bitwise-identical:
+        ``failures=[(time_s, mn_id), ...]`` becomes ``FailMN`` events
+        and ``resizes=[(time_s, n_cn, m_mn), ...]`` becomes ``Resize``
+        events (failures first at equal times — the historical
+        tie-break).  Failure/recovery ids are validated against the
+        schedule-aware *maximum* pool, so a failure scheduled after a
+        timed grow is accepted.
 
         Execution is real JAX; time is a virtual clock advanced with the
         analytic stage model, so latencies are deterministic and
         comparable to ServingUnitModel / ClusterSim."""
-        cfg = self.cfg
-        batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
-        self._refresh_hot_tables()     # hotness measured by prior serving
-        fail_q = sorted(failures)
-        for _, j in fail_q:
-            # ids refer to the pool at serve start; an id only becomes a
-            # no-op if a scheduled shrink retires that MN before it fires
-            if not 0 <= j < self.m_mn:
-                raise ValueError(f"failure event targets MN {j} outside "
-                                 f"the serving pool of {self.m_mn}")
-        resize_q = sorted(resizes)
-        payload = {r.rid: r.payload for r in requests}
-        arrival = {r.rid: r.arrival for r in requests}
-        row_cursor: Dict[int, int] = {r.rid: 0 for r in requests}
-        pieces: Dict[int, List[np.ndarray]] = {r.rid: [] for r in requests}
-        rows_left = {r.rid: r.size for r in requests}
-        results: List[Result] = []
-        latencies: List[float] = []
-
-        st = self.unit_model.stage_times(cfg.batch_size)
-        mn_bw = np.asarray(self.mn_bw)
-        cn_pre_free = np.zeros(self.n_cn)
-        cn_gpu_free = np.zeros(self.n_cn)
-        mn_barrier = 0.0              # sequential lock-step over the pool
-        mig_end = 0.0                 # background migration busy-until
-
-        def mn_stage(mem_j: np.ndarray, gat_j: np.ndarray,
-                     cache_s: float = 0.0) -> Tuple[np.ndarray, float]:
-            """G_S + gather time for one batch: every MN scans (and, for
-            NMP, pools — a bandwidth-bound streaming reduction) locally
-            in parallel at its own memory bandwidth, then the batch's
-            gather bytes serialize into the owning CN's back-end NIC.
-            The CN-side cache probe + hit service overlaps the remote
-            scans (hits never wait on the fabric), so it widens the
-            stage only if it outlasts the slowest MN.
-            Returns (per-MN stage contributions, batch gating time)."""
-            stage_j = mem_j / mn_bw + gat_j / hw.NIC_BW
-            gate = float(max((mem_j / mn_bw).max(), cache_s)
-                         + gat_j.sum() / hw.NIC_BW)
-            return stage_j, gate
-
-        def inject(upto: float) -> None:
-            """Apply failure and resize events in global time order.
-            Resizes take effect at batch boundaries; a resize stamped
-            inside a batch's MN stage applies before the next batch."""
-            nonlocal st, mn_bw, cn_pre_free, cn_gpu_free, mig_end
-            while True:
-                t_f = fail_q[0][0] if fail_q else math.inf
-                t_r = resize_q[0][0] if resize_q else math.inf
-                if min(t_f, t_r) > upto:
-                    return
-                if t_f <= t_r:
-                    _, j = fail_q.pop(0)
-                    if j < self.m_mn:   # an MN that shrank away can't fail
-                        self.fail_mn(j)
-                    continue
-                t, nn, mm = resize_q.pop(0)
-                plan = self.resize(nn, mm)
-                st = self.unit_model.stage_times(cfg.batch_size)
-                mn_bw = np.asarray(self.mn_bw)
-                # joining CNs are idle from the resize instant; a
-                # departing CN's queue retires with it (batches are
-                # placed by argmin over the live pool)
-                cn_pre_free = _fit(cn_pre_free, self.n_cn, t)
-                cn_gpu_free = _fit(cn_gpu_free, self.n_cn, t)
-                # migration bytes stream over the fabric in the
-                # background, starting when the resize fires
-                mig_end = max(mig_end, t) + plan.bytes_moved / hw.NIC_BW
-
-        def run_batch(b: Batch, now: float) -> None:
-            nonlocal mn_barrier, mig_end
-            # assemble real rows from each member query's payload
-            dense_rows, idx_rows = [], []
-            for q, nrows in b.parts:
-                c = row_cursor[q.qid]
-                dense_rows.append(payload[q.qid]["dense"][c:c + nrows])
-                idx_rows.append(payload[q.qid]["indices"][c:c + nrows])
-                row_cursor[q.qid] = c + nrows
-            dense = np.concatenate(dense_rows)
-            idx = np.concatenate(idx_rows)
-            pad = cfg.batch_size - dense.shape[0]
-            if pad > 0:
-                dense = np.concatenate(
-                    [dense, np.zeros_like(dense[:1]).repeat(pad, 0)])
-                idx = np.concatenate(
-                    [idx, -np.ones_like(idx[:1]).repeat(pad, 0)])
-
-            scale = b.size / cfg.batch_size
-            task = int(np.argmin(cn_pre_free))
-            pre_done = max(now, cn_pre_free[task]) + st.t_pre * scale
-            cn_pre_free[task] = pre_done
-            mn_start = max(pre_done + st.t_comm_in * scale, mn_barrier)
-
-            # MNs that died during G_P/scatter are gone before this batch's
-            # MN stage begins: re-route first, then execute
-            inject(mn_start)
-            # a CN shrink landing inside the G_P/scatter window may have
-            # retired the chosen CN: hand the batch off to a survivor and
-            # redo its pre stage there
-            while task >= len(cn_pre_free):
-                task = int(np.argmin(cn_pre_free))
-                pre_done = max(now, cn_pre_free[task]) + st.t_pre * scale
-                cn_pre_free[task] = pre_done
-                mn_start = max(pre_done + st.t_comm_in * scale, mn_barrier)
-                inject(mn_start)
-            scores, mem_j, gat_j = self._execute(task, dense, idx)
-            stage_j, t_mn = mn_stage(mem_j, gat_j, self._batch_cache_s)
-
-            # a failure landing inside this batch's MN stage hits packets
-            # in flight: rebuild routing, re-issue on the survivors
-            while (fail_q and mn_start < fail_q[0][0] <= mn_start + t_mn):
-                t_fail, j = fail_q.pop(0)
-                if j >= self.m_mn:      # departed via an earlier shrink
-                    continue
-                hit = mem_j[j] > 0
-                self.fail_mn(j)
-                if hit:
-                    # the aborted scan's traffic was already on the wire
-                    # and the bus — charge the wasted first pass before
-                    # re-issuing on the survivors
-                    self.reissues += 1
-                    self.mn_access_bytes += mem_j
-                    self.mn_gather_bytes += gat_j
-                    self.mn_stage_s += stage_j
-                    scores, mem_j, gat_j = self._execute(task, dense, idx)
-                    stage_j, t_mn = mn_stage(mem_j, gat_j,
-                                             self._batch_cache_s)
-                    mn_start = t_fail + cfg.mn_recovery_s
-            # an in-flight shard migration fair-shares the gather NIC
-            # path with this batch: each stream extends by the other's
-            # demand for the overlap
-            if mn_start < mig_end and gat_j.sum() > 0:
-                extra = float(gat_j.sum()) / hw.NIC_BW
-                t_mn += extra
-                mig_end += extra
-            mn_done = mn_start + t_mn
-            mn_barrier = mn_done
-            self.mn_access_bytes += mem_j
-            self.mn_gather_bytes += gat_j
-            self.mn_stage_s += stage_j
-            self._mn_stage_max_sum += t_mn
-            self._n_batches += 1
-            # keep admission priorities tracking the live workload even
-            # on an event-free run (deterministic: a pure function of
-            # the stream prefix served so far)
-            if self.caches and self._n_batches % 8 == 0:
-                self._refresh_hot_tables()
-
-            g_start = max(mn_done, cn_gpu_free[task])
-            done = g_start + st.t_dense * scale
-            cn_gpu_free[task] = done
-
-            o = 0
-            for q, nrows in b.parts:
-                pieces[q.qid].append(scores[o:o + nrows])
-                o += nrows
-                rows_left[q.qid] -= nrows
-                if rows_left[q.qid] == 0:
-                    lat = done - arrival[q.qid]
-                    latencies.append(lat)
-                    results.append(Result(
-                        q.qid, np.concatenate(pieces[q.qid]), lat))
-
-        def drain_due(upto: Optional[float]) -> None:
-            """Form every batch whose flush deadline has passed."""
-            while True:
-                dl = batcher.next_deadline()
-                if dl is None or (upto is not None and dl > upto):
-                    return
-                inject(dl)
-                out = batcher.flush(dl)
-                if not out:
-                    return
-                for b in out:
-                    run_batch(b, dl)
-
-        for req in sorted(requests, key=lambda r: r.arrival):
-            drain_due(req.arrival)
-            inject(req.arrival)
-            q = Query(req.rid, req.arrival, req.size)
-            for b in batcher.offer(q, req.arrival):
-                run_batch(b, req.arrival)
-        drain_due(None)
-
-        if latencies:
-            lats = np.asarray(latencies)
-            mean_lat = float(lats.mean())
-            p50 = float(np.percentile(lats, 50))
-            p95 = float(np.percentile(lats, 95))
-            p99 = float(np.percentile(lats, 99))
-        else:       # nothing completed: report nan, not a fabricated 0.0
-            mean_lat = p50 = p95 = p99 = float("nan")
-        live = [a for j, a in enumerate(self.mn_access_bytes)
-                if j not in self.dead]
-        cs = self.cache_stats()
-        stats = ClusterStats(
-            completed=len(results),
-            mean_latency=mean_lat,
-            p50=p50,
-            p95=p95,
-            failures=self.failures,
-            reroutes=self.reroutes,
-            reinits=self.reinits,
-            mn_access_bytes=list(self.mn_access_bytes),
-            mn_gather_bytes=list(self.mn_gather_bytes),
-            mn_types=list(self.mn_types),
-            imbalance=em.imbalance(live),
-            recoveries=self.recoveries,
-            resizes=self.resizes,
-            migration_bytes=self.migration_bytes,
-            retired_access_bytes=self.retired_access_bytes,
-            retired_gather_bytes=self.retired_gather_bytes,
-            p99=p99,
-            reissues=self.reissues,
-            cache_hits=cs.hits,
-            cache_misses=cs.misses,
-            cache_evictions=cs.evictions,
-            cache_invalidations=cs.invalidations,
-            cache_bytes_saved=self.cache_bytes_saved,
-        )
-        results.sort(key=lambda r: r.rid)
-        return results, stats
+        from repro.serving.timeline import TimelineDispatcher, legacy_events
+        evs = legacy_events(failures, resizes) + list(events or ())
+        return TimelineDispatcher(self, requests, evs).run()
 
     # ------------------------------------------------------- validation
     def validate_latency_model(self) -> Dict[str, float]:

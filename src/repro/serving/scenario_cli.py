@@ -1,0 +1,20 @@
+"""Scenario lint/run CLI: ``python -m repro.serving.scenario_cli``.
+
+A thin wrapper so the command-line entry point is a module the serving
+package does NOT import: running ``-m repro.serving.scenario`` directly
+executes that file a second time as ``__main__`` (runpy warns, and the
+``__main__`` copy's event classes would fail the dispatcher's
+isinstance checks — ``scenario.py`` guards against the latter by
+delegating, but the dual execution and the warning remain).  This
+module exists only in ``sys.modules`` as itself, so the scenario module
+loads exactly once, under its canonical name.
+
+  PYTHONPATH=src python -m repro.serving.scenario_cli \
+      examples/scenarios/*.json [--run] [--write-presets DIR]
+"""
+import sys
+
+from repro.serving.scenario import main
+
+if __name__ == "__main__":
+    sys.exit(main())

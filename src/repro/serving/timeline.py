@@ -1,0 +1,400 @@
+"""Event-timeline dispatcher: `ClusterEngine.serve`'s execution core.
+
+This module is the un-nesting of what used to be a ~270-line closure
+stack inside ``ClusterEngine.serve``: one :class:`TimelineDispatcher`
+owns a serve call's transient state (the ingress batcher, per-CN clock
+arrays, per-request assembly buffers) and consumes a **unified, typed
+event queue** (``serving.scenario`` events) in global time order.
+
+Dispatch semantics (the ordering guarantees the scenario API documents):
+
+- Events are stable-sorted by ``time_s``; equal times fire in listed
+  order.  The legacy ``failures=``/``resizes=`` kwargs are converted by
+  :func:`legacy_events` with failures listed before resizes, preserving
+  the historical tie-break — legacy runs are bitwise-identical to their
+  ``ScenarioSpec`` equivalents by construction.
+- All events apply at batch boundaries on the virtual clock (before the
+  next batch whose MN stage starts at or after their fire time), except
+  ``FailMN``: a failure landing *inside* a batch's MN stage hits packets
+  in flight — the batch's wasted first pass is charged, routing rebuilds
+  over the survivors, and the batch re-issues (``reissues`` counter).
+  A failure queued *behind* an earlier-timed pool-state event
+  (``RecoverMN``/``ReloadParams``/``ReplanPlacement``) defers to the
+  boundary so state changes on the same resource apply in true time
+  order (see ``_next_fail``).
+- A ``FailMN``/``RecoverMN`` aimed at an MN that has shrunk out of the
+  pool by fire time is a recorded no-op (the machine isn't there), and a
+  ``RecoverMN`` for a live MN likewise.  One asymmetry is deliberate
+  (and pinned by legacy bitwise parity): a shrink stamped earlier
+  *inside the same MN stage* has not taken effect yet when a failure
+  strikes packets in flight — the MN is still live mid-stage, so the
+  failure fires; the shrink lands at the next boundary.  Only at batch
+  boundaries is "shrunk away" meaningful.  Validation happens up front
+  against the *schedule-aware maximum* pool
+  (``scenario.validate_events``), so a failure scheduled after a timed
+  grow is accepted even though the target MN doesn't exist yet at serve
+  start.
+- ``SetWorkload`` is consumed when the stream is built
+  (``scenario.plan_workload``); here it is audit-trail-only.
+
+Every applied (or skipped) event lands in the audit trail as an
+:class:`EventRecord` — event, fire time, resulting pool shape — which
+``serve`` returns on ``ClusterStats.events``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import embedding_manager as em
+from repro.core import hardware as hw
+from repro.core.scheduler import Batch, Batcher, Query
+from repro.serving.cluster import ClusterStats, _fit
+from repro.serving.engine import Request, Result
+from repro.serving.scenario import (FailMN, RecoverMN, ReloadParams,
+                                    ReplanPlacement, Resize, ScenarioEvent,
+                                    SetWorkload, _lat_stats, sort_events,
+                                    validate_events)
+
+
+def legacy_events(failures: Sequence[Tuple[float, int]],
+                  resizes: Sequence[Tuple[float, int, int]]
+                  ) -> List[ScenarioEvent]:
+    """Shim the historical ``serve(failures=, resizes=)`` kwargs into
+    typed events.  Failures are listed before resizes so the stable
+    time-sort reproduces the old tie-break (a failure and a resize at
+    the same instant applied the failure first)."""
+    evs: List[ScenarioEvent] = [
+        FailMN(float(t), mn=int(j)) for t, j in sorted(failures)]
+    evs += [Resize(float(t), n_cn=int(n), m_mn=int(m))
+            for t, n, m in sorted(resizes)]
+    return evs
+
+
+@dataclass(frozen=True)
+class EventRecord:
+    """Audit-trail entry: one timeline event and the pool it left
+    behind (``applied=False`` marks a recorded no-op — e.g. a failure
+    aimed at an MN that had already shrunk away)."""
+    event: ScenarioEvent
+    time_s: float
+    n_cn: int
+    m_mn: int
+    dead: Tuple[int, ...]
+    applied: bool = True
+
+
+class TimelineDispatcher:
+    """One serve call: consume the event queue in global time order
+    while batching, routing, and scoring the request stream on the
+    engine's virtual clock."""
+
+    def __init__(self, engine, requests: Sequence[Request],
+                 events: Sequence[ScenarioEvent]):
+        self.eng = engine
+        self.requests = list(requests)
+        self.queue: List[ScenarioEvent] = sort_events(events)
+        validate_events(self.queue, engine.m_mn)
+        self.audit: List[EventRecord] = []
+
+    # ------------------------------------------------------ event apply
+    def _record(self, ev: ScenarioEvent, applied: bool = True) -> None:
+        e = self.eng
+        self.audit.append(EventRecord(ev, ev.time_s, e.n_cn, e.m_mn,
+                                      tuple(sorted(e.dead)), applied))
+
+    def _apply(self, ev: ScenarioEvent) -> None:
+        """Apply one batch-boundary event and record the resulting pool
+        shape.  (Mid-MN-stage failures take the in-flight path in
+        ``_run_batch`` instead.)"""
+        e = self.eng
+        if isinstance(ev, FailMN):
+            if ev.mn < e.m_mn:      # an MN that shrank away can't fail
+                already = ev.mn in e.dead
+                e.fail_mn(ev.mn)
+                self._record(ev, applied=not already)
+            else:
+                self._record(ev, applied=False)
+        elif isinstance(ev, RecoverMN):
+            if ev.mn < e.m_mn and ev.mn in e.dead:
+                e.recover_mn(ev.mn)
+                self._record(ev)
+            else:                   # departed, never failed, or healed
+                self._record(ev, applied=False)
+        elif isinstance(ev, Resize):
+            # an identity resize (the pool already has the target shape)
+            # returns early inside the engine without counting — mirror
+            # that in the audit so applied records match stats.resizes
+            changed = ((e.n_cn if ev.n_cn is None else ev.n_cn,
+                        e.m_mn if ev.m_mn is None else ev.m_mn)
+                       != (e.n_cn, e.m_mn))
+            plan = e.resize(ev.n_cn, ev.m_mn, ev.mn_type)
+            self.st = e.unit_model.stage_times(e.cfg.batch_size)
+            self.mn_bw = np.asarray(e.mn_bw)
+            # joining CNs are idle from the resize instant; a departing
+            # CN's queue retires with it (batches are placed by argmin
+            # over the live pool)
+            self.cn_pre_free = _fit(self.cn_pre_free, e.n_cn, ev.time_s)
+            self.cn_gpu_free = _fit(self.cn_gpu_free, e.n_cn, ev.time_s)
+            # migration bytes stream over the fabric in the background,
+            # starting when the resize fires
+            self.mig_end = (max(self.mig_end, ev.time_s)
+                            + plan.bytes_moved / hw.NIC_BW)
+            self._record(ev, applied=changed)
+        elif isinstance(ev, ReloadParams):
+            e.reload_params(e.model.init(ev.seed) if ev.seed is not None
+                            else e.params)
+            self._record(ev)
+        elif isinstance(ev, ReplanPlacement):
+            e.replan_placement()
+            self._record(ev)
+        else:       # SetWorkload: consumed at stream build; audit only
+            self._record(ev)
+
+    def _inject(self, upto: float) -> None:
+        """Apply every queued event with fire time <= `upto`, in global
+        time order (batch-boundary semantics)."""
+        while self.queue and self.queue[0].time_s <= upto:
+            self._apply(self.queue.pop(0))
+
+    def _next_fail(self) -> Tuple[Optional[int], Optional[FailMN]]:
+        """The next failure eligible for the in-flight mid-stage path.
+
+        ``Resize`` and ``SetWorkload`` are pure batch-boundary events
+        and may be scanned past (the historical semantics: a failure
+        strikes packets in flight even if a resize is stamped earlier
+        inside the same stage — legacy parity pins this).  Pool-*state*
+        events on the queue (``RecoverMN``/``ReloadParams``/
+        ``ReplanPlacement``) are barriers instead: a failure behind one
+        defers to the next boundary, where `_inject` applies both in
+        true time order — otherwise a later failure of an MN could
+        apply before its earlier-timed recovery and leave the pool in
+        the time-reversed state (and the audit trail out of order).
+        Likewise a failure whose target MN only exists after a pending
+        earlier-timed grow defers to the boundary — popping it now
+        (pool not yet grown) would silently no-op an event the
+        schedule-aware validation promised would fire."""
+        m_pend = self.eng.m_mn       # pool size at the failure's fire
+        for i, ev in enumerate(self.queue):  # time, per pending resizes
+            if isinstance(ev, FailMN):
+                if ev.mn >= self.eng.m_mn and ev.mn < m_pend:
+                    return None, None     # exists only after the grow
+                return i, ev
+            if isinstance(ev, Resize):
+                if ev.m_mn is not None:
+                    m_pend = ev.m_mn
+                continue
+            if isinstance(ev, SetWorkload):
+                continue
+            return None, None
+        return None, None
+
+    # --------------------------------------------------------- serving
+    def _mn_stage(self, mem_j: np.ndarray, gat_j: np.ndarray,
+                  cache_s: float = 0.0) -> Tuple[np.ndarray, float]:
+        """G_S + gather time for one batch: every MN scans (and, for
+        NMP, pools — a bandwidth-bound streaming reduction) locally in
+        parallel at its own memory bandwidth, then the batch's gather
+        bytes serialize into the owning CN's back-end NIC.  The CN-side
+        cache probe + hit service overlaps the remote scans (hits never
+        wait on the fabric), so it widens the stage only if it outlasts
+        the slowest MN.  Returns (per-MN stage contributions, batch
+        gating time)."""
+        stage_j = mem_j / self.mn_bw + gat_j / hw.NIC_BW
+        gate = float(max((mem_j / self.mn_bw).max(), cache_s)
+                     + gat_j.sum() / hw.NIC_BW)
+        return stage_j, gate
+
+    def _run_batch(self, b: Batch, now: float) -> None:
+        e = self.eng
+        cfg = e.cfg
+        st = self.st
+        # assemble real rows from each member query's payload
+        dense_rows, idx_rows = [], []
+        for q, nrows in b.parts:
+            c = self.row_cursor[q.qid]
+            dense_rows.append(self.payload[q.qid]["dense"][c:c + nrows])
+            idx_rows.append(self.payload[q.qid]["indices"][c:c + nrows])
+            self.row_cursor[q.qid] = c + nrows
+        dense = np.concatenate(dense_rows)
+        idx = np.concatenate(idx_rows)
+        pad = cfg.batch_size - dense.shape[0]
+        if pad > 0:
+            dense = np.concatenate(
+                [dense, np.zeros_like(dense[:1]).repeat(pad, 0)])
+            idx = np.concatenate(
+                [idx, -np.ones_like(idx[:1]).repeat(pad, 0)])
+
+        scale = b.size / cfg.batch_size
+        task = int(np.argmin(self.cn_pre_free))
+        pre_done = max(now, self.cn_pre_free[task]) + st.t_pre * scale
+        self.cn_pre_free[task] = pre_done
+        mn_start = max(pre_done + st.t_comm_in * scale, self.mn_barrier)
+
+        # MNs that died during G_P/scatter are gone before this batch's
+        # MN stage begins: re-route first, then execute
+        self._inject(mn_start)
+        # a CN shrink landing inside the G_P/scatter window may have
+        # retired the chosen CN: hand the batch off to a survivor and
+        # redo its pre stage there
+        while task >= len(self.cn_pre_free):
+            st = self.st
+            task = int(np.argmin(self.cn_pre_free))
+            pre_done = max(now, self.cn_pre_free[task]) + st.t_pre * scale
+            self.cn_pre_free[task] = pre_done
+            mn_start = max(pre_done + st.t_comm_in * scale,
+                           self.mn_barrier)
+            self._inject(mn_start)
+        st = self.st
+        scores, mem_j, gat_j = e._execute(task, dense, idx)
+        stage_j, t_mn = self._mn_stage(mem_j, gat_j, e._batch_cache_s)
+
+        # a failure landing inside this batch's MN stage hits packets
+        # in flight: rebuild routing, re-issue on the survivors
+        while True:
+            qi, nxt = self._next_fail()
+            if nxt is None or not (mn_start < nxt.time_s
+                                   <= mn_start + t_mn):
+                break
+            self.queue.pop(qi)
+            t_fail, j = nxt.time_s, nxt.mn
+            if j >= e.m_mn:         # departed via an earlier shrink
+                self._record(nxt, applied=False)
+                continue
+            hit = mem_j[j] > 0
+            already = j in e.dead
+            e.fail_mn(j)
+            self._record(nxt, applied=not already)
+            if hit:
+                # the aborted scan's traffic was already on the wire
+                # and the bus — charge the wasted first pass before
+                # re-issuing on the survivors
+                e.reissues += 1
+                e.mn_access_bytes += mem_j
+                e.mn_gather_bytes += gat_j
+                e.mn_stage_s += stage_j
+                scores, mem_j, gat_j = e._execute(task, dense, idx)
+                stage_j, t_mn = self._mn_stage(mem_j, gat_j,
+                                               e._batch_cache_s)
+                mn_start = t_fail + cfg.mn_recovery_s
+        # an in-flight shard migration fair-shares the gather NIC path
+        # with this batch: each stream extends by the other's demand
+        # for the overlap
+        if mn_start < self.mig_end and gat_j.sum() > 0:
+            extra = float(gat_j.sum()) / hw.NIC_BW
+            t_mn += extra
+            self.mig_end += extra
+        mn_done = mn_start + t_mn
+        self.mn_barrier = mn_done
+        e.mn_access_bytes += mem_j
+        e.mn_gather_bytes += gat_j
+        e.mn_stage_s += stage_j
+        e._mn_stage_max_sum += t_mn
+        e._n_batches += 1
+        # keep admission priorities tracking the live workload even on
+        # an event-free run (deterministic: a pure function of the
+        # stream prefix served so far)
+        if e.caches and e._n_batches % 8 == 0:
+            e._refresh_hot_tables()
+
+        g_start = max(mn_done, self.cn_gpu_free[task])
+        done = g_start + st.t_dense * scale
+        self.cn_gpu_free[task] = done
+
+        o = 0
+        for q, nrows in b.parts:
+            self.pieces[q.qid].append(scores[o:o + nrows])
+            o += nrows
+            self.rows_left[q.qid] -= nrows
+            if self.rows_left[q.qid] == 0:
+                lat = done - self.arrival[q.qid]
+                self.latencies.append(lat)
+                self.results.append(Result(
+                    q.qid, np.concatenate(self.pieces[q.qid]), lat))
+
+    def _drain_due(self, upto: Optional[float]) -> None:
+        """Form every batch whose flush deadline has passed."""
+        while True:
+            dl = self.batcher.next_deadline()
+            if dl is None or (upto is not None and dl > upto):
+                return
+            self._inject(dl)
+            out = self.batcher.flush(dl)
+            if not out:
+                return
+            for b in out:
+                self._run_batch(b, dl)
+
+    def run(self) -> Tuple[List[Result], ClusterStats]:
+        e = self.eng
+        cfg = e.cfg
+        self.batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
+        e._refresh_hot_tables()    # hotness measured by prior serving
+        requests = self.requests
+        self.payload = {r.rid: r.payload for r in requests}
+        self.arrival = {r.rid: r.arrival for r in requests}
+        self.row_cursor: Dict[int, int] = {r.rid: 0 for r in requests}
+        self.pieces: Dict[int, List[np.ndarray]] = {
+            r.rid: [] for r in requests}
+        self.rows_left = {r.rid: r.size for r in requests}
+        self.results: List[Result] = []
+        self.latencies: List[float] = []
+
+        self.st = e.unit_model.stage_times(cfg.batch_size)
+        self.mn_bw = np.asarray(e.mn_bw)
+        self.cn_pre_free = np.zeros(e.n_cn)
+        self.cn_gpu_free = np.zeros(e.n_cn)
+        self.mn_barrier = 0.0      # sequential lock-step over the pool
+        self.mig_end = 0.0         # background migration busy-until
+
+        for req in sorted(requests, key=lambda r: r.arrival):
+            self._drain_due(req.arrival)
+            self._inject(req.arrival)
+            q = Query(req.rid, req.arrival, req.size)
+            for b in self.batcher.offer(q, req.arrival):
+                self._run_batch(b, req.arrival)
+        self._drain_due(None)
+        # events stamped after the last batch deadline still belong to
+        # the scenario: flush them in time order so the declared
+        # end-state (and the audit trail) matches the timeline instead
+        # of silently dropping the tail.  No batch runs after this, so
+        # scores/latencies/bytes are untouched — only routing, pool
+        # shape, and counters move.
+        self._inject(math.inf)
+
+        # nothing completed reports nan, not a fabricated 0.0
+        mean_lat, p50, p95, p99 = _lat_stats(self.latencies)
+        live = [a for j, a in enumerate(e.mn_access_bytes)
+                if j not in e.dead]
+        cs = e.cache_stats()
+        stats = ClusterStats(
+            completed=len(self.results),
+            mean_latency=mean_lat,
+            p50=p50,
+            p95=p95,
+            failures=e.failures,
+            reroutes=e.reroutes,
+            reinits=e.reinits,
+            mn_access_bytes=list(e.mn_access_bytes),
+            mn_gather_bytes=list(e.mn_gather_bytes),
+            mn_types=list(e.mn_types),
+            imbalance=em.imbalance(live),
+            recoveries=e.recoveries,
+            resizes=e.resizes,
+            migration_bytes=e.migration_bytes,
+            retired_access_bytes=e.retired_access_bytes,
+            retired_gather_bytes=e.retired_gather_bytes,
+            p99=p99,
+            reissues=e.reissues,
+            cache_hits=cs.hits,
+            cache_misses=cs.misses,
+            cache_evictions=cs.evictions,
+            cache_invalidations=cs.invalidations,
+            cache_bytes_saved=e.cache_bytes_saved,
+            events=list(self.audit),
+        )
+        self.results.sort(key=lambda r: r.rid)
+        return self.results, stats

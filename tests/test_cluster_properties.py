@@ -107,8 +107,9 @@ def _check_failure_preserves_outputs(n_cn, m_mn, nrep, nmp_count,
     want = {r.rid: r.outputs for r in res_c}
     for r in res_f:
         assert np.array_equal(r.outputs, want[r.rid])
-    # fast path only (a late fail time may never be injected; a reinit
-    # restores the full pool): the dead MN must carry no routes
+    # fast path only (a late fail time applies at the end-of-stream
+    # event flush; a reinit restores the full pool): the dead MN must
+    # carry no routes
     if stats.reroutes and not stats.reinits:
         for (task, tid), dest in eng.routing.routes.items():
             assert dest != fail_mn

@@ -1,0 +1,610 @@
+"""Declarative scenario API (issue #5): serde round-trips, the unified
+timeline dispatcher, legacy-kwarg bitwise parity, timed recoveries, the
+schedule-aware failure bounds check, and the per-event audit trail.
+
+The tentpole invariants:
+
+- every event type survives dict/JSON round-trip with equality;
+- a shuffled event list executes identically to a pre-sorted one (the
+  dispatcher owns the ordering guarantee);
+- a legacy ``serve(failures=, resizes=)`` run is bitwise-identical —
+  scores, latencies, and every ClusterStats counter — to the same
+  sequence expressed as a ``ScenarioSpec`` through ``run_scenario``.
+"""
+import dataclasses
+import json
+import math
+import pathlib
+import random
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro import configs
+from repro.configs import rm1
+from repro.data.queries import QueryDist, dlrm_request_stream
+from repro.models.dlrm import DLRMModel
+from repro.serving import scenario as sc
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+from repro.serving.scenario import (FailMN, ModelRef, RecoverMN,
+                                    ReloadParams, ReplanPlacement, Resize,
+                                    ScenarioSpec, SetWorkload, Topology,
+                                    Workload, plan_workload, preset,
+                                    run_scenario, smoke_topology)
+from repro.serving.timeline import EventRecord, legacy_events
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-scenario",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+MODEL = DLRMModel(CFG)
+PARAMS = MODEL.init(0)
+
+ALL_EVENTS = (
+    FailMN(0.01, mn=1),
+    RecoverMN(0.02, mn=1),
+    Resize(0.03, n_cn=3, m_mn=5),
+    Resize(0.035, m_mn=4, mn_type="nmp_mn"),
+    ReloadParams(0.04, seed=7),
+    ReplanPlacement(0.05),
+    SetWorkload(0.06, alpha=1.05, gap_s=0.001, mean_size=6.0,
+                sigma=0.5, max_size=32),
+)
+
+
+def _workload(requests=12, **kw):
+    kw.setdefault("mean_size", 4.0)
+    kw.setdefault("max_size", 12)
+    kw.setdefault("gap_s", 0.004)
+    return Workload(requests=requests, **kw)
+
+
+def _spec(events=(), topology=None, workload=None, name="t"):
+    return ScenarioSpec(name=name,
+                        topology=topology or smoke_topology(batch_size=8),
+                        workload=workload or _workload(),
+                        events=tuple(events))
+
+
+def _legacy_requests(spec):
+    w = spec.workload
+    qd = QueryDist(mean_size=w.mean_size, sigma=w.sigma,
+                   max_size=w.max_size, alpha=w.alpha)
+    return [Request(*t) for t in dlrm_request_stream(
+        CFG, w.requests, seed=w.seed, dist=qd, gap_s=w.gap_s)]
+
+
+# ------------------------------------------------------------ serde
+@pytest.mark.parametrize("ev", ALL_EVENTS, ids=lambda e: e.kind)
+def test_event_dict_round_trip(ev):
+    d = ev.to_dict()
+    assert d["type"] == ev.kind
+    assert sc.event_from_dict(json.loads(json.dumps(d))) == ev
+
+
+def test_spec_json_round_trip_every_event_type():
+    spec = ScenarioSpec(
+        name="all-events",
+        description="every event type at once",
+        model=ModelRef(arch="rm1", reduced=True, init_seed=3),
+        topology=smoke_topology(
+            mn_types=("ddr_mn", "ddr_mn", "nmp_mn", "nmp_mn"),
+            cache_mb=1.5, cache_policy="lfu"),
+        workload=Workload(requests=20, mean_size=6.0, sigma=0.8,
+                          max_size=48, alpha=1.05, gap_s=0.003, seed=11),
+        events=ALL_EVENTS,
+    )
+    spec.validate()
+    rt = ScenarioSpec.from_json(spec.to_json())
+    assert rt == spec
+    assert rt.topology.mn_types == spec.topology.mn_types  # tuple, not list
+    # and via a real file
+    assert ScenarioSpec.from_dict(json.loads(spec.to_json())) == spec
+
+
+def test_spec_serde_rejects_garbage():
+    with pytest.raises(ValueError):
+        sc.event_from_dict({"type": "explode_mn", "time_s": 0.1})
+    with pytest.raises(ValueError):
+        sc.event_from_dict({"type": "fail_mn"})             # no time_s
+    with pytest.raises(ValueError):
+        sc.event_from_dict({"type": "fail_mn", "time_s": 0.1, "mmn": 2})
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict({"topology": {}})            # no name
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict({"name": "x", "topolgy": {}})
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict({"name": "x", "topology": {"n_cns": 2}})
+
+
+def test_spec_validate_rejects_bad_fields():
+    with pytest.raises(ValueError):
+        _spec(topology=smoke_topology(n_cn=0)).validate()
+    with pytest.raises(ValueError):
+        _spec(topology=smoke_topology(cache_policy="mru")).validate()
+    with pytest.raises(ValueError):
+        _spec(topology=smoke_topology(mn_types=("ddr_mn",))).validate()
+    with pytest.raises(ValueError):
+        _spec(topology=smoke_topology(cn_type="ddr_mn")).validate()
+    with pytest.raises(ValueError):
+        _spec(workload=_workload(requests=-1)).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[Resize(0.01, m_mn=0)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[FailMN(float("nan"), mn=0)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[SetWorkload(0.01, alpha=-1.0)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[Resize(0.01, mn_type="cn_1g")]).validate()
+
+
+def test_validate_rejects_fractional_ids_and_counts():
+    """A lint-passing JSON scenario must not smuggle float ids into the
+    engine: fail_mn(1.5) would land in the dead set without ever
+    matching a real MN."""
+    with pytest.raises(ValueError):
+        _spec(events=[FailMN(0.01, mn=1.5)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[RecoverMN(0.01, mn=True)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[Resize(0.01, m_mn=2.5)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[ReloadParams(0.01, seed=1.5)]).validate()
+    with pytest.raises(ValueError):
+        _spec(events=[SetWorkload(0.01, max_size=8.5)]).validate()
+    with pytest.raises(ValueError):
+        _spec(workload=_workload(requests=3.5)).validate()
+    with pytest.raises(ValueError):
+        _spec(topology=smoke_topology(m_mn=4.0)).validate()
+    # string-typed numerics are a lint ValueError, not a raw TypeError
+    with pytest.raises(ValueError):
+        _spec(events=[SetWorkload(0.01, alpha="1.2")]).validate()
+    with pytest.raises(ValueError):
+        _spec(workload=_workload(mean_size="8.0")).validate()
+
+
+def test_identity_resize_recorded_as_noop():
+    """A resize targeting the pool's current shape returns early inside
+    the engine without counting — the audit record must say so, keeping
+    'applied resize records == stats.resizes' consistent."""
+    spec = _spec(events=[Resize(0.01, n_cn=2, m_mn=4)])   # already {2,4}
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.stats.resizes == 0
+    recs = [r for r in rep.stats.events if isinstance(r.event, Resize)]
+    assert len(recs) == 1 and not recs[0].applied
+
+
+def test_trailing_events_flush_at_end_of_stream():
+    """Events stamped after the last batch deadline still belong to the
+    scenario: they apply (in time order) once the stream drains, so the
+    report's final pool matches the declared timeline and the audit
+    trail records every event."""
+    spec = _spec(workload=_workload(requests=6),
+                 events=[FailMN(0.008, mn=1),
+                         RecoverMN(5.0, mn=1),       # long after the end
+                         Resize(6.0, n_cn=3, m_mn=5)])
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total
+    assert rep.stats.failures == 1 and rep.stats.recoveries == 1
+    assert rep.stats.resizes == 1
+    assert (rep.final_n_cn, rep.final_m_mn) == (3, 5)
+    assert [r.event.kind for r in rep.stats.events] == [
+        "fail_mn", "recover_mn", "resize"]
+    assert rep.stats.events[-1].applied
+    assert not rep.engine.dead            # the recovery really landed
+
+
+# ------------------------------------- schedule-aware failure bounds fix
+def test_failure_after_timed_grow_is_accepted():
+    """Satellite: a failure aimed at an MN that only exists after a
+    scheduled grow must validate against the schedule-aware maximum
+    pool, not the pool at serve start — and actually fire."""
+    spec = _spec(events=[Resize(0.01, n_cn=2, m_mn=6),
+                         FailMN(0.03, mn=5)])
+    spec.validate()                        # MN 5 exists once m_mn=6
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total
+    assert rep.stats.failures == 1
+    fired = [r for r in rep.stats.events
+             if isinstance(r.event, FailMN) and r.applied]
+    assert fired and fired[0].m_mn == 6 and 5 in fired[0].dead
+
+
+def test_failure_before_its_enabling_grow_rejected():
+    """A grow scheduled AFTER the failure cannot justify its id: the
+    schedule never reaches that pool state in time, so accepting it
+    would let the event silently no-op against the un-grown pool."""
+    spec = _spec(events=[FailMN(0.01, mn=5), Resize(0.05, m_mn=6)])
+    with pytest.raises(ValueError):
+        spec.validate()
+    # ...while the same pair in fire order is accepted
+    _spec(events=[Resize(0.005, m_mn=6), FailMN(0.01, mn=5)]).validate()
+
+
+def test_failure_beyond_schedule_max_still_rejected():
+    spec = _spec(events=[Resize(0.01, m_mn=6), FailMN(0.03, mn=6)])
+    with pytest.raises(ValueError):
+        spec.validate()
+    with pytest.raises(ValueError):
+        run_scenario(spec, model=MODEL, params=PARAMS)
+    # the engine-level timeline rejects too (no spec in the way)
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2))
+    with pytest.raises(ValueError):
+        eng.serve(_legacy_requests(_spec()),
+                  events=[RecoverMN(0.01, mn=9)])
+
+
+def test_legacy_failure_bounds_still_enforced():
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2))
+    reqs = _legacy_requests(_spec())
+    with pytest.raises(ValueError):
+        eng.serve(reqs, failures=[(0.01, 99)])
+    # ...but the same id is fine when the schedule grows the pool first
+    res, stats = eng.serve(reqs, failures=[(0.03, 5)],
+                           resizes=[(0.01, 2, 6)])
+    assert stats.completed == len(reqs) and stats.failures == 1
+
+
+# ---------------------------------------------- legacy bitwise parity
+def _stats_equal(a, b) -> bool:
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    # the audit trail differs only in event *values* when the two runs
+    # were fed different-but-equivalent inputs; here we require full
+    # equality (the shim builds identical typed events)
+    return _nan_eq(da, db)
+
+
+def _nan_eq(a, b) -> bool:
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(_nan_eq(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return (len(a) == len(b)
+                and all(_nan_eq(x, y) for x, y in zip(a, b)))
+    return a == b
+
+
+PARITY_GRID = [
+    # (failures, resizes) legacy kwargs and their event equivalents
+    ([(0.015, 1)], []),
+    ([], [(0.015, 3, 6)]),
+    ([(0.01, 1)], [(0.02, 3, 5)]),
+    ([(0.02, 2)], [(0.01, 1, 2)]),
+    ([(0.015, 0), (0.03, 2)], [(0.02, 2, 6), (0.04, 1, 3)]),
+    ([(0.02, 1)], [(0.02, 3, 5)]),          # tie: failure fires first
+]
+
+
+@pytest.mark.parametrize("failures,resizes", PARITY_GRID)
+def test_legacy_kwargs_bitwise_equal_scenario_events(failures, resizes):
+    """Acceptance: the same sequence expressed through legacy kwargs
+    and through typed events scores bitwise-identically — results,
+    latencies, and the entire ClusterStats including the audit trail."""
+    spec = _spec(events=legacy_events(failures, resizes))
+    reqs = _legacy_requests(spec)
+    cc = spec.topology.cluster_config(seed=spec.workload.seed)
+
+    legacy = ClusterEngine(MODEL, PARAMS, cc)
+    res_l, st_l = legacy.serve(_legacy_requests(spec),
+                               failures=failures, resizes=resizes)
+    typed = ClusterEngine(MODEL, PARAMS, cc)
+    res_t, st_t = typed.serve(reqs, events=spec.events)
+    assert _stats_equal(st_l, st_t)
+    for a, b in zip(res_l, res_t):
+        assert a.rid == b.rid and a.latency == b.latency
+        assert np.array_equal(a.outputs, b.outputs)
+
+    # and through the declarative front door (stream rebuilt from the
+    # spec's workload — must reproduce dlrm_request_stream exactly)
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert _stats_equal(st_l, rep.stats)
+    for a, b in zip(res_l, rep.results):
+        assert a.rid == b.rid and a.latency == b.latency
+        assert np.array_equal(a.outputs, b.outputs)
+
+
+def test_report_bitwise_equal_helper():
+    """The shared parity predicate the benches/examples assert."""
+    clean = run_scenario(_spec(), model=MODEL, params=PARAMS)
+    evd = run_scenario(_spec(events=[FailMN(0.015, mn=1)]),
+                       model=MODEL, params=PARAMS)
+    assert evd.bitwise_equal(clean) and clean.bitwise_equal(evd)
+    other = run_scenario(
+        _spec(events=[ReloadParams(0.01, seed=9)]),
+        model=MODEL, params=PARAMS)        # weights changed mid-stream
+    assert not other.bitwise_equal(clean)
+
+
+def test_plan_workload_single_phase_matches_request_stream():
+    spec = _spec(workload=_workload(requests=9, alpha=1.05, seed=5))
+    reqs, phases = plan_workload(spec, CFG)
+    want = _legacy_requests(spec)
+    assert len(phases) == 1 and phases[0].requests == 9
+    assert len(reqs) == len(want)
+    for a, b in zip(reqs, want):
+        assert a.rid == b.rid and a.size == b.size
+        assert a.arrival == b.arrival
+        assert np.array_equal(a.payload["dense"], b.payload["dense"])
+        assert np.array_equal(a.payload["indices"], b.payload["indices"])
+
+
+# ------------------------------------------- timeline ordering property
+def _run_events(events):
+    spec = _spec(events=events, workload=_workload(requests=10, seed=3))
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    key = [(dataclasses.asdict(r.event) | {"kind": r.event.kind},
+            r.n_cn, r.m_mn, r.dead, r.applied) for r in rep.stats.events]
+    scores = np.concatenate([r.outputs for r in rep.results])
+    return key, scores, rep.stats
+
+
+_EVENT_POOL = [
+    FailMN(0.008, mn=1), RecoverMN(0.017, mn=1), Resize(0.012, n_cn=3),
+    Resize(0.022, m_mn=5), ReplanPlacement(0.027), FailMN(0.031, mn=2),
+    SetWorkload(0.014, alpha=1.05), RecoverMN(0.036, mn=2),
+]
+
+
+@settings(max_examples=10, deadline=None)
+@given(mask=st.integers(1, 2 ** len(_EVENT_POOL) - 1),
+       seed=st.integers(0, 999))
+def test_shuffled_events_execute_identically(mask, seed):
+    """Property: a shuffled event list executes identically to the
+    pre-sorted one — the dispatcher, not the caller, owns time order."""
+    chosen = [e for i, e in enumerate(_EVENT_POOL) if mask >> i & 1]
+    shuffled = list(chosen)
+    random.Random(seed).shuffle(shuffled)
+    key_a, scores_a, _ = _run_events(sc.sort_events(chosen))
+    key_b, scores_b, _ = _run_events(shuffled)
+    assert key_a == key_b
+    assert np.array_equal(scores_a, scores_b)
+
+
+def test_shuffled_events_execute_identically_pinned():
+    shuffled = [_EVENT_POOL[i] for i in (5, 0, 7, 2, 4, 1, 6, 3)]
+    key_a, scores_a, st_a = _run_events(sc.sort_events(_EVENT_POOL))
+    key_b, scores_b, st_b = _run_events(shuffled)
+    assert key_a == key_b
+    assert np.array_equal(scores_a, scores_b)
+    assert st_a.failures == st_b.failures == 2
+    assert st_a.recoveries == st_b.recoveries == 2
+
+
+# -------------------------------------- timed recovery + audit trail
+def test_failure_recovery_resize_chain_bitwise_and_audited():
+    """The chain no legacy kwarg can express: fail -> timed recover ->
+    resize, scores bitwise-identical to the event-free run, and every
+    step in the audit trail with its real fire timestamp and resulting
+    pool shape."""
+    events = (FailMN(0.01, mn=1), RecoverMN(0.022, mn=1),
+              Resize(0.034, n_cn=3, m_mn=6))
+    spec = _spec(events=events)
+    clean = run_scenario(_spec(), model=MODEL, params=PARAMS)
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total
+    want = {r.rid: r.outputs for r in clean.results}
+    for r in rep.results:
+        assert np.array_equal(r.outputs, want[r.rid])
+
+    recs = rep.stats.events
+    assert [r.event for r in recs] == list(events)
+    assert [r.time_s for r in recs] == [0.01, 0.022, 0.034]
+    # recoveries appear with real timestamps, not untimed method calls
+    rec = recs[1]
+    assert isinstance(rec.event, RecoverMN) and rec.applied
+    assert rec.time_s == 0.022 and rec.dead == ()
+    assert recs[0].dead == (1,)
+    assert (recs[2].n_cn, recs[2].m_mn) == (3, 6)
+    assert rep.stats.recoveries == 1 and rep.stats.resizes == 1
+    assert (rep.final_n_cn, rep.final_m_mn) == (3, 6)
+
+
+def test_mid_stage_failure_defers_to_earlier_recovery():
+    """A failure whose timestamp lands inside a batch's MN stage must
+    NOT jump ahead of an earlier-timed recovery of the same MN queued
+    before it — both apply at the boundary in true time order, so the
+    MN ends dead (recover@t1 then fail@t2), not alive, and the audit
+    trail stays time-sorted.  The MN stage is microseconds wide at real
+    bandwidths, so the engine's scan bandwidth is throttled to stretch
+    the window across both timestamps."""
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2))
+    eng.fail_mn(1)                       # dead before the stream starts
+    eng.mn_bw = [1.0] * eng.m_mn         # stretch the MN stage window
+    reqs = _legacy_requests(_spec())
+    res, stats = eng.serve(reqs, events=[RecoverMN(0.01, mn=1),
+                                         FailMN(0.02, mn=1)])
+    assert stats.completed == len(reqs)
+    assert 1 in eng.dead                 # time order: recover, THEN fail
+    assert stats.recoveries == 1 and stats.failures == 2
+    times = [r.time_s for r in stats.events]
+    assert times == sorted(times)
+
+
+def test_mid_stage_failure_waits_for_pending_grow():
+    """A failure whose target MN is created by an earlier-timed grow in
+    the same MN-stage window must defer to the boundary (where the grow
+    applies first) instead of firing early against the un-grown pool
+    and silently no-opping — the schedule-aware validation promised the
+    event would land."""
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2))
+    eng.mn_bw = [1.0] * eng.m_mn         # stretch the MN stage window
+    reqs = _legacy_requests(_spec())
+    res, stats = eng.serve(reqs, events=[Resize(0.01, m_mn=6),
+                                         FailMN(0.02, mn=5)])
+    assert stats.completed == len(reqs)
+    assert stats.resizes == 1 and stats.failures == 1
+    assert 5 in eng.dead                 # the promised failure landed
+    times = [r.time_s for r in stats.events]
+    assert times == sorted(times)
+    assert all(r.applied for r in stats.events)
+
+
+def test_recovery_no_op_recorded_not_applied():
+    spec = _spec(events=[RecoverMN(0.01, mn=2)])     # never failed
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    recs = rep.stats.events
+    assert len(recs) == 1 and not recs[0].applied
+    assert rep.stats.recoveries == 0
+
+
+def test_failure_for_shrunk_away_mn_recorded_as_noop():
+    spec = _spec(events=[Resize(0.008, m_mn=2), FailMN(0.02, mn=3)])
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total
+    assert rep.stats.failures == 0
+    fail_rec = [r for r in rep.stats.events
+                if isinstance(r.event, FailMN)][0]
+    assert not fail_rec.applied and fail_rec.m_mn == 2
+
+
+def test_reload_params_event_reloads_and_flushes():
+    spec = _spec(events=[ReloadParams(0.02, seed=9)],
+                 topology=smoke_topology(batch_size=8, cache_mb=0.01))
+    clean = run_scenario(_spec(), model=MODEL, params=PARAMS)
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total
+    # weights changed mid-stream: later queries score differently
+    want = {r.rid: r.outputs for r in clean.results}
+    assert any(not np.array_equal(r.outputs, want[r.rid])
+               for r in rep.results)
+    assert any(isinstance(r.event, ReloadParams) and r.applied
+               for r in rep.stats.events)
+
+
+# ------------------------------------------------ SetWorkload phases
+def test_set_workload_phases_change_stream_and_report():
+    spec = _spec(
+        workload=_workload(requests=12, alpha=0.0, seed=4),
+        events=[SetWorkload(0.016, alpha=1.3),
+                SetWorkload(0.032, gap_s=0.002, mean_size=6.0)])
+    reqs, phases = plan_workload(spec, CFG)
+    assert [p.index for p in phases] == [0, 1, 2]
+    assert [p.alpha for p in phases] == [0.0, 1.3, 1.3]
+    assert phases[2].gap_s == 0.002 and phases[2].mean_size == 6.0
+    assert sum(p.requests for p in phases) == 12
+    assert all(p.requests > 0 for p in phases)
+    # arrivals respect each phase's gap
+    a = [r.arrival for r in reqs]
+    assert a == sorted(a)
+    assert a[phases[2].rid_start + 1] - a[phases[2].rid_start] \
+        == pytest.approx(0.002)
+    # skew actually moved: the Zipf phase concentrates on low row ids
+    ph0 = np.concatenate([reqs[i].payload["indices"].ravel()
+                          for i in range(phases[0].rid_start,
+                                         phases[0].rid_end)])
+    ph1 = np.concatenate([reqs[i].payload["indices"].ravel()
+                          for i in range(phases[1].rid_start,
+                                         phases[1].rid_end)])
+    assert np.median(ph1[ph1 >= 0]) < np.median(ph0[ph0 >= 0])
+
+    rep = run_scenario(spec, model=MODEL, params=PARAMS)
+    assert len(rep.phases) == 3
+    assert [p.requests for p in rep.phases] == [p.requests for p in phases]
+    assert sum(p.completed for p in rep.phases) == rep.completed
+
+
+def test_set_workload_at_t0_overrides_base():
+    spec = _spec(workload=_workload(requests=6, alpha=0.0),
+                 events=[SetWorkload(0.0, alpha=1.2)])
+    _, phases = plan_workload(spec, CFG)
+    assert phases[0].requests == 0          # base phase never sampled
+    assert phases[1].alpha == 1.2 and phases[1].requests == 6
+
+
+# --------------------------------------------------- presets + lint CLI
+@pytest.mark.parametrize("name", sorted(sc.PRESETS))
+def test_preset_json_files_match_builders(name):
+    """examples/scenarios/*.json are the serialized preset builders —
+    one source of truth, pinned here."""
+    spec = preset(name)
+    spec.validate()
+    root = pathlib.Path(__file__).resolve().parent.parent
+    disk = ScenarioSpec.load(str(root / "examples" / "scenarios"
+                                 / f"{name}.json"))
+    assert disk == spec
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+
+
+def test_preset_unknown_name():
+    with pytest.raises(KeyError):
+        preset("nope")
+
+
+def test_scenario_lint_cli(tmp_path, capsys):
+    p = tmp_path / "s.json"
+    spec = _spec(events=[FailMN(0.01, mn=1)], name="lint-me")
+    spec.save(str(p))
+    assert sc.main([str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "lint-me" in out and "ok" in out
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"name": "x",
+                               "events": [{"type": "nope", "time_s": 1}]}))
+    with pytest.raises(ValueError):
+        sc.main([str(bad)])
+
+
+def test_scenario_run_cli_builds_model_from_spec(tmp_path, capsys):
+    """`python -m repro.serving.scenario --run file.json` end-to-end:
+    the spec's model section (arch/reduced/init_seed) builds the DLRM
+    when run_scenario isn't handed one."""
+    spec = ScenarioSpec(
+        name="cli-run",
+        topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=6, mean_size=4.0, max_size=8,
+                          gap_s=0.004, seed=1),
+        events=(FailMN(0.008, mn=0),))
+    p = tmp_path / "r.json"
+    spec.save(str(p))
+    assert sc.main([str(p), "--run"]) == 0
+    out = capsys.readouterr().out
+    assert "cli-run" in out and "6/6" in out
+
+
+def test_scenario_write_presets_cli(tmp_path):
+    assert sc.main(["--write-presets", str(tmp_path)]) == 0
+    for name in sc.PRESETS:
+        assert ScenarioSpec.load(str(tmp_path / f"{name}.json")) \
+            == preset(name)
+
+
+def test_run_scenario_front_door_smoke():
+    """Acceptance: a spec containing {fail, recover, resize,
+    set-workload} events round-trips through JSON and runs via
+    run_scenario on the reduced model."""
+    spec = ScenarioSpec(
+        name="acceptance",
+        topology=smoke_topology(batch_size=8),
+        workload=_workload(requests=10, seed=2),
+        events=(FailMN(0.008, mn=1), RecoverMN(0.016, mn=1),
+                Resize(0.024, n_cn=3, m_mn=5),
+                SetWorkload(0.02, alpha=1.05)),
+    )
+    rt = ScenarioSpec.from_json(spec.to_json())
+    assert rt == spec
+    rep = run_scenario(rt, model=MODEL, params=PARAMS)
+    assert rep.completed == rep.total == 10
+    assert rep.stats.failures == 1 and rep.stats.recoveries == 1
+    assert rep.stats.resizes == 1
+    assert len(rep.phases) == 2
+    assert {r.event.kind for r in rep.stats.events} == {
+        "fail_mn", "recover_mn", "resize", "set_workload"}
+    d = rep.to_dict()
+    json.dumps(d)                       # report is JSON-able
+    assert d["final_pool"] == {"n_cn": 3, "m_mn": 5,
+                               "mn_types": ["ddr_mn"] * 5}
+    # audit events keep their type discriminator in the JSON report
+    assert [e["event"]["type"] for e in d["events"]] == [
+        "fail_mn", "recover_mn", "set_workload", "resize"]
+    assert rep.summary()
