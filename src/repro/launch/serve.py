@@ -64,7 +64,8 @@ def spec_from_flags(args) -> ScenarioSpec:
             n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
             n_replicas=args.replicas, use_kernel=args.use_kernel,
             mn_types=mn_types, cache_mb=args.cache_mb,
-            cache_policy=args.cache_policy),
+            cache_policy=args.cache_policy,
+            inflight_depth=args.inflight_depth),
         workload=Workload(requests=args.requests, mean_size=8.0,
                           max_size=4 * args.batch, alpha=args.alpha,
                           gap_s=0.001, seed=args.seed),
@@ -120,6 +121,10 @@ def main(argv=None):
     p.add_argument("--cache-mb", type=float, default=0.0,
                    help="per-CN hot-row cache budget in MB (cluster mode; "
                         "0 disables)")
+    p.add_argument("--inflight-depth", type=int, default=1,
+                   help="max batches concurrently inside the MN stage "
+                        "(1 = sequential clock, bitwise-identical to "
+                        "the pre-pipeline model)")
     p.add_argument("--cache-policy", default="lru", choices=["lru", "lfu"],
                    help="hot-row cache eviction policy")
     p.add_argument("--no-kernel", dest="use_kernel", action="store_false",

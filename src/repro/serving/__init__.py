@@ -8,6 +8,8 @@ cache.RowCache        — per-CN hot-row embedding cache (LRU/LFU)
 scenario.ScenarioSpec — declarative scenarios: typed event timelines,
                         JSON serde, presets, run_scenario front door
 timeline.TimelineDispatcher — serve()'s unified event-queue executor
+pipeline.ResourceClock — per-resource FIFO timelines + depth-d
+                        admission for pipelined batch overlap
 """
 from repro.serving.autoscaler import (Autoscaler,  # noqa: F401
                                       AutoscalerConfig, ResizeEvent)
@@ -22,6 +24,8 @@ from repro.serving.scenario import (FailMN, ModelRef,  # noqa: F401
                                     ScenarioReport, ScenarioSpec,
                                     SetWorkload, Topology, Workload,
                                     preset, run_scenario, smoke_topology)
+from repro.serving.pipeline import (AdmissionWindow,  # noqa: F401
+                                    BatchTrace, ResourceClock)
 from repro.serving.simulator import ClusterSim, SimConfig  # noqa: F401
 from repro.serving.timeline import (EventRecord,  # noqa: F401
                                     TimelineDispatcher)

@@ -150,6 +150,12 @@ class ClusterConfig:
     mn_recovery_s: float = fail_mod.recovery_cost_s("mn")
     cache_mb: float = 0.0         # per-CN hot-row cache budget (CN HBM)
     cache_policy: str = "lru"     # lru | lfu
+    inflight_depth: int = 1       # max batches concurrently inside the MN
+                                  # stage (scans + gather) pool-wide; 1 =
+                                  # the sequential clock (bitwise parity
+                                  # with the pre-pipeline engine), >1 =
+                                  # pipelined overlap on per-resource
+                                  # FIFO queues (serving.pipeline)
     seed: int = 0                 # the stream seed this engine serves
                                   # (dlrm_request_stream convention); the
                                   # serving path itself holds no RNG, so
@@ -186,6 +192,18 @@ class ClusterStats:
     cache_evictions: int = 0
     cache_invalidations: int = 0  # rows dropped by coherence events
     cache_bytes_saved: float = 0.0      # gather bytes hits kept off the NIC
+    # pipelined execution (serving.pipeline): per-resource timelines.
+    # Resource keys are "cn_cpu:i" (G_P), "cn_nic:i" (gather),
+    # "cn_gpu:i" (G_D), "mn_bus:j" (scans); a retired (shrunk-away)
+    # node's clock folds into its slot's totals.
+    inflight_depth: int = 1       # the depth this run was served at
+    makespan_s: float = 0.0       # last batch completion on the clock
+    throughput_qps: float = float("nan")   # completed / makespan
+    admission_wait_s: float = 0.0  # MN-stage admission stall, all batches
+    resource_busy_s: Dict[str, float] = field(default_factory=dict)
+    resource_queue_s: Dict[str, float] = field(default_factory=dict)
+    resource_util: Dict[str, float] = field(default_factory=dict)
+    resource_occupancy: Dict[str, float] = field(default_factory=dict)
     # per-event audit trail: serving.timeline.EventRecord entries in
     # fire order — event, fire time, resulting pool shape.  Recoveries,
     # resizes, reloads, and replans all appear here with real virtual-
@@ -259,6 +277,10 @@ class ClusterEngine:
         self.retired_gather_bytes = 0.0
         self._mn_stage_max_sum = 0.0                # per-batch gating stage
         self._n_batches = 0
+        # pipelined-execution introspection: the most recent serve()
+        # call's per-batch trace and resource clocks (serving.pipeline)
+        self.last_trace: List = []
+        self.last_resources: List = []
 
     def _pool_capacities(self, m_mn: int) -> List[int]:
         """Per-MN shard budget at pool size `m_mn`: the requested

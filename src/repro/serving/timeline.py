@@ -40,6 +40,22 @@ Dispatch semantics (the ordering guarantees the scenario API documents):
 Every applied (or skipped) event lands in the audit trail as an
 :class:`EventRecord` — event, fire time, resulting pool shape — which
 ``serve`` returns on ``ClusterStats.events``.
+
+**Pipelined execution** (``serving.pipeline``): the virtual clock is a
+set of per-resource FIFO timelines — each CN's preprocess core, gather
+NIC, and GPU, and each MN's memory bus — and a batch's completion time
+is the max over its resource chains.  ``ClusterConfig.inflight_depth``
+bounds how many batches may be inside the MN stage (scans + gather) at
+once; at depth 1 the admission floor degenerates to the old global
+``mn_barrier`` and the dispatcher commits every stage with the
+sequential clock's closed-form arithmetic, so depth-1 runs are
+bitwise-identical to the pre-pipeline engine (scores, latencies, and
+every ClusterStats counter).  At depth > 1 batch k+1's scans overlap
+batch k's gather and dense stages, with per-resource queueing charged
+where contention actually happens.  A mid-stage ``FailMN`` aborts the
+struck batch's planned intervals at the failure instant — the in-
+flight prefix of each scan/gather is charged to its resource — before
+the batch re-issues on the survivors.
 """
 from __future__ import annotations
 
@@ -52,8 +68,10 @@ import numpy as np
 from repro.core import embedding_manager as em
 from repro.core import hardware as hw
 from repro.core.scheduler import Batch, Batcher, Query
-from repro.serving.cluster import ClusterStats, _fit
+from repro.serving.cluster import ClusterStats
 from repro.serving.engine import Request, Result
+from repro.serving.pipeline import (AdmissionWindow, BatchTrace, MNPlan,
+                                    fit_clocks, summarize_resources)
 from repro.serving.scenario import (FailMN, RecoverMN, ReloadParams,
                                     ReplanPlacement, Resize, ScenarioEvent,
                                     SetWorkload, _lat_stats, sort_events,
@@ -134,11 +152,19 @@ class TimelineDispatcher:
             plan = e.resize(ev.n_cn, ev.m_mn, ev.mn_type)
             self.st = e.unit_model.stage_times(e.cfg.batch_size)
             self.mn_bw = np.asarray(e.mn_bw)
-            # joining CNs are idle from the resize instant; a departing
-            # CN's queue retires with it (batches are placed by argmin
-            # over the live pool)
-            self.cn_pre_free = _fit(self.cn_pre_free, e.n_cn, ev.time_s)
-            self.cn_gpu_free = _fit(self.cn_gpu_free, e.n_cn, ev.time_s)
+            # joining nodes are idle from the resize instant; a
+            # departing node's clocks retire with their accumulated
+            # stats (they stay in the registry for end-of-run
+            # aggregation).  Batches are placed by earliest-free over
+            # the live pool.
+            self.cn_cpu = fit_clocks(self.cn_cpu, e.n_cn, "cn_cpu",
+                                     ev.time_s, self._clocks)
+            self.cn_nic = fit_clocks(self.cn_nic, e.n_cn, "cn_nic",
+                                     ev.time_s, self._clocks)
+            self.cn_gpu = fit_clocks(self.cn_gpu, e.n_cn, "cn_gpu",
+                                     ev.time_s, self._clocks)
+            self.mn_bus = fit_clocks(self.mn_bus, e.m_mn, "mn_bus",
+                                     ev.time_s, self._clocks)
             # migration bytes stream over the fabric in the background,
             # starting when the resize fires
             self.mig_end = (max(self.mig_end, ev.time_s)
@@ -193,20 +219,96 @@ class TimelineDispatcher:
         return None, None
 
     # --------------------------------------------------------- serving
-    def _mn_stage(self, mem_j: np.ndarray, gat_j: np.ndarray,
-                  cache_s: float = 0.0) -> Tuple[np.ndarray, float]:
-        """G_S + gather time for one batch: every MN scans (and, for
-        NMP, pools — a bandwidth-bound streaming reduction) locally in
-        parallel at its own memory bandwidth, then the batch's gather
-        bytes serialize into the owning CN's back-end NIC.  The CN-side
-        cache probe + hit service overlaps the remote scans (hits never
-        wait on the fabric), so it widens the stage only if it outlasts
-        the slowest MN.  Returns (per-MN stage contributions, batch
-        gating time)."""
-        stage_j = mem_j / self.mn_bw + gat_j / hw.NIC_BW
-        gate = float(max((mem_j / self.mn_bw).max(), cache_s)
-                     + gat_j.sum() / hw.NIC_BW)
-        return stage_j, gate
+    def _stage_account(self, mem_j: np.ndarray,
+                       gat_j: np.ndarray) -> np.ndarray:
+        """Per-MN stage-seconds contributions (scan at the MN's bus
+        bandwidth + its share of the gather serialization) — the byte-
+        derived accounting the sequential engine charged per batch."""
+        return mem_j / self.mn_bw + gat_j / hw.NIC_BW
+
+    def _mn_plan(self, task: int, mn_start: float, mem_j: np.ndarray,
+                 gat_j: np.ndarray, cache_s: float) -> MNPlan:
+        """Plan (without committing) one batch's MN stage on the
+        per-resource clocks: every routed MN scans (and, for NMP, pools
+        — a bandwidth-bound streaming reduction) locally in parallel on
+        its own memory bus, then the batch's gather bytes serialize
+        into the owning CN's back-end NIC once every scan and the
+        CN-side cache probe (which overlaps the remote scans — hits
+        never wait on the fabric) have drained.
+
+        The closed-form gate ``t_gate`` is computed with the sequential
+        clock's exact floating-point arithmetic; it is the committed
+        stage time whenever no resource queues the batch (always true
+        at depth 1), which is what makes depth-1 runs bitwise-identical
+        to the pre-pipeline engine."""
+        scans: List[Tuple[int, float, float]] = []
+        max_dur = 0.0
+        scan_end = mn_start
+        queued = False
+        for j in np.nonzero(mem_j > 0)[0]:
+            dur = mem_j[j] / self.mn_bw[j]
+            s = self.mn_bus[j].peek(mn_start)
+            if s > mn_start:
+                queued = True
+            scans.append((int(j), s, dur))
+            if dur > max_dur:
+                max_dur = dur
+            if s + dur > scan_end:
+                scan_end = s + dur
+        g_dur = float(gat_j.sum() / hw.NIC_BW)
+        t_gate = float(max(max_dur, cache_s) + g_dur)
+        gather_ready = max(scan_end, mn_start + cache_s)
+        if g_dur > 0:
+            g_start = self.cn_nic[task].peek(gather_ready)
+            if g_start > gather_ready:
+                queued = True
+        else:
+            g_start = gather_ready
+        end = (g_start + g_dur) if queued else (mn_start + t_gate)
+        return MNPlan(mn_start=mn_start, scans=scans, t_gate=t_gate,
+                      gather_ready=gather_ready, gather_start=g_start,
+                      gather_dur=g_dur, queued=queued, end=end)
+
+    def _mn_abort(self, task: int, plan: MNPlan, t_fail: float,
+                  bid: int) -> None:
+        """An in-flight MN failure killed this batch's first pass at
+        ``t_fail``: the traffic already on the buses and the NIC was
+        real, so each planned interval's in-flight prefix is charged to
+        its resource before the batch re-issues.  (The byte counters
+        charge the full pass, matching the sequential engine.)"""
+        for j, s, dur in plan.scans:
+            self.mn_bus[j].charge_abort(s, min(s + dur, t_fail), bid)
+        if plan.gather_dur > 0 and plan.gather_start < t_fail:
+            self.cn_nic[task].charge_abort(
+                plan.gather_start, min(plan.end, t_fail), bid)
+
+    def _mn_commit(self, task: int, plan: MNPlan, extra_gather: float,
+                   bid: int) -> Tuple[float, float, Tuple[float, float]]:
+        """Commit the settled plan to the clocks.  Returns (stage done
+        time, stage span, gather interval).  ``extra_gather`` is the
+        in-flight shard migration's fair-share extension of the gather
+        serialization.  Wait-free commits reproduce the sequential
+        clock's closed-form chain bit-for-bit; queued commits follow
+        the per-resource chain."""
+        mn_start = plan.mn_start
+        if plan.queued:
+            g_dur = plan.gather_dur + extra_gather
+            mn_done = (plan.gather_start + g_dur if plan.gather_dur > 0
+                       else plan.gather_ready)
+            t_mn = mn_done - mn_start
+        else:
+            t_mn = plan.t_gate
+            if extra_gather:
+                t_mn = t_mn + extra_gather
+            mn_done = mn_start + t_mn
+        for j, s, dur in plan.scans:
+            self.mn_bus[j].book(mn_start, s, s + dur, bid)
+        gather = (plan.gather_start, plan.gather_start)
+        if plan.gather_dur > 0:
+            self.cn_nic[task].book(plan.gather_ready, plan.gather_start,
+                                   mn_done, bid)
+            gather = (plan.gather_start, mn_done)
+        return mn_done, t_mn, gather
 
     def _run_batch(self, b: Batch, now: float) -> None:
         e = self.eng
@@ -229,10 +331,12 @@ class TimelineDispatcher:
                 [idx, -np.ones_like(idx[:1]).repeat(pad, 0)])
 
         scale = b.size / cfg.batch_size
-        task = int(np.argmin(self.cn_pre_free))
-        pre_done = max(now, self.cn_pre_free[task]) + st.t_pre * scale
-        self.cn_pre_free[task] = pre_done
-        mn_start = max(pre_done + st.t_comm_in * scale, self.mn_barrier)
+        task = min(range(len(self.cn_cpu)),
+                   key=lambda i: self.cn_cpu[i].free_at)
+        pre_start, pre_done = self.cn_cpu[task].reserve(
+            now, st.t_pre * scale, b.bid)
+        chain_ready = pre_done + st.t_comm_in * scale
+        mn_start = max(chain_ready, self.window.floor())
 
         # MNs that died during G_P/scatter are gone before this batch's
         # MN stage begins: re-route first, then execute
@@ -240,24 +344,28 @@ class TimelineDispatcher:
         # a CN shrink landing inside the G_P/scatter window may have
         # retired the chosen CN: hand the batch off to a survivor and
         # redo its pre stage there
-        while task >= len(self.cn_pre_free):
+        while task >= len(self.cn_cpu):
             st = self.st
-            task = int(np.argmin(self.cn_pre_free))
-            pre_done = max(now, self.cn_pre_free[task]) + st.t_pre * scale
-            self.cn_pre_free[task] = pre_done
-            mn_start = max(pre_done + st.t_comm_in * scale,
-                           self.mn_barrier)
+            task = min(range(len(self.cn_cpu)),
+                       key=lambda i: self.cn_cpu[i].free_at)
+            pre_start, pre_done = self.cn_cpu[task].reserve(
+                now, st.t_pre * scale, b.bid)
+            chain_ready = pre_done + st.t_comm_in * scale
+            mn_start = max(chain_ready, self.window.floor())
             self._inject(mn_start)
         st = self.st
+        self.window.wait_s += mn_start - chain_ready
         scores, mem_j, gat_j = e._execute(task, dense, idx)
-        stage_j, t_mn = self._mn_stage(mem_j, gat_j, e._batch_cache_s)
+        stage_j = self._stage_account(mem_j, gat_j)
+        plan = self._mn_plan(task, mn_start, mem_j, gat_j,
+                             e._batch_cache_s)
 
         # a failure landing inside this batch's MN stage hits packets
         # in flight: rebuild routing, re-issue on the survivors
+        reissued = 0
         while True:
             qi, nxt = self._next_fail()
-            if nxt is None or not (mn_start < nxt.time_s
-                                   <= mn_start + t_mn):
+            if nxt is None or not (mn_start < nxt.time_s <= plan.end):
                 break
             self.queue.pop(qi)
             t_fail, j = nxt.time_s, nxt.mn
@@ -269,26 +377,31 @@ class TimelineDispatcher:
             e.fail_mn(j)
             self._record(nxt, applied=not already)
             if hit:
-                # the aborted scan's traffic was already on the wire
-                # and the bus — charge the wasted first pass before
-                # re-issuing on the survivors
+                # the aborted pass's traffic was already on the wire
+                # and the bus — charge the wasted bytes in full and
+                # each planned interval's in-flight prefix to its
+                # resource, then re-issue on the survivors
                 e.reissues += 1
+                reissued += 1
                 e.mn_access_bytes += mem_j
                 e.mn_gather_bytes += gat_j
                 e.mn_stage_s += stage_j
+                self._mn_abort(task, plan, t_fail, b.bid)
                 scores, mem_j, gat_j = e._execute(task, dense, idx)
-                stage_j, t_mn = self._mn_stage(mem_j, gat_j,
-                                               e._batch_cache_s)
+                stage_j = self._stage_account(mem_j, gat_j)
                 mn_start = t_fail + cfg.mn_recovery_s
+                plan = self._mn_plan(task, mn_start, mem_j, gat_j,
+                                     e._batch_cache_s)
         # an in-flight shard migration fair-shares the gather NIC path
         # with this batch: each stream extends by the other's demand
         # for the overlap
+        extra = 0.0
         if mn_start < self.mig_end and gat_j.sum() > 0:
             extra = float(gat_j.sum()) / hw.NIC_BW
-            t_mn += extra
             self.mig_end += extra
-        mn_done = mn_start + t_mn
-        self.mn_barrier = mn_done
+        mn_done, t_mn, gather_iv = self._mn_commit(task, plan, extra,
+                                                   b.bid)
+        self.window.complete(mn_done)
         e.mn_access_bytes += mem_j
         e.mn_gather_bytes += gat_j
         e.mn_stage_s += stage_j
@@ -300,17 +413,32 @@ class TimelineDispatcher:
         if e.caches and e._n_batches % 8 == 0:
             e._refresh_hot_tables()
 
-        g_start = max(mn_done, self.cn_gpu_free[task])
-        done = g_start + st.t_dense * scale
-        self.cn_gpu_free[task] = done
+        d_start, done = self.cn_gpu[task].reserve(
+            mn_done, st.t_dense * scale, b.bid)
+        if done > self.last_done:
+            self.last_done = done
+        self.trace.append(BatchTrace(
+            bid=b.bid, task=task, size=b.size, pre=(pre_start, pre_done),
+            chain_ready=chain_ready, mn_start=mn_start,
+            scans=tuple((j, s, s + dur) for j, s, dur in plan.scans),
+            gather=gather_iv, mn_done=mn_done, dense=(d_start, done),
+            done=done, reissues=reissued,
+            qids=tuple(q.qid for q, _ in b.parts)))
 
         o = 0
         for q, nrows in b.parts:
             self.pieces[q.qid].append(scores[o:o + nrows])
             o += nrows
             self.rows_left[q.qid] -= nrows
+            prev = self.part_done.get(q.qid)
+            if prev is None or done > prev:
+                self.part_done[q.qid] = done
             if self.rows_left[q.qid] == 0:
-                lat = done - self.arrival[q.qid]
+                # a split query completes when its LAST part's dense
+                # stage finishes — under pipelining (and even on the
+                # sequential clock, across CNs with uneven GPU queues)
+                # the batch that zeroes rows_left need not finish last
+                lat = self.part_done[q.qid] - self.arrival[q.qid]
                 self.latencies.append(lat)
                 self.results.append(Result(
                     q.qid, np.concatenate(self.pieces[q.qid]), lat))
@@ -345,10 +473,17 @@ class TimelineDispatcher:
 
         self.st = e.unit_model.stage_times(cfg.batch_size)
         self.mn_bw = np.asarray(e.mn_bw)
-        self.cn_pre_free = np.zeros(e.n_cn)
-        self.cn_gpu_free = np.zeros(e.n_cn)
-        self.mn_barrier = 0.0      # sequential lock-step over the pool
+        self.depth = int(cfg.inflight_depth)
+        self.window = AdmissionWindow(self.depth)
+        self._clocks: List = []    # every clock ever created (live+retired)
+        self.cn_cpu = fit_clocks([], e.n_cn, "cn_cpu", 0.0, self._clocks)
+        self.cn_nic = fit_clocks([], e.n_cn, "cn_nic", 0.0, self._clocks)
+        self.cn_gpu = fit_clocks([], e.n_cn, "cn_gpu", 0.0, self._clocks)
+        self.mn_bus = fit_clocks([], e.m_mn, "mn_bus", 0.0, self._clocks)
         self.mig_end = 0.0         # background migration busy-until
+        self.last_done = 0.0       # makespan: latest dense finish
+        self.trace: List[BatchTrace] = []
+        self.part_done: Dict[int, float] = {}
 
         for req in sorted(requests, key=lambda r: r.arrival):
             self._drain_due(req.arrival)
@@ -370,6 +505,9 @@ class TimelineDispatcher:
         live = [a for j, a in enumerate(e.mn_access_bytes)
                 if j not in e.dead]
         cs = e.cache_stats()
+        makespan = self.last_done
+        r_busy, r_queue, r_util, r_occ = summarize_resources(
+            self._clocks, makespan)
         stats = ClusterStats(
             completed=len(self.results),
             mean_latency=mean_lat,
@@ -394,7 +532,18 @@ class TimelineDispatcher:
             cache_evictions=cs.evictions,
             cache_invalidations=cs.invalidations,
             cache_bytes_saved=e.cache_bytes_saved,
+            inflight_depth=self.depth,
+            makespan_s=makespan,
+            throughput_qps=(len(self.results) / makespan
+                            if makespan > 0 else float("nan")),
+            admission_wait_s=self.window.wait_s,
+            resource_busy_s=r_busy,
+            resource_queue_s=r_queue,
+            resource_util=r_util,
+            resource_occupancy=r_occ,
             events=list(self.audit),
         )
+        e.last_trace = self.trace
+        e.last_resources = list(self._clocks)
         self.results.sort(key=lambda r: r.rid)
         return self.results, stats

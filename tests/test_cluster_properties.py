@@ -153,6 +153,39 @@ def _check_cache_bitwise_and_bytes(n_cn, m_mn, alpha, cache_mb, policy,
         assert st_c.cache_bytes_saved == mem_b - mem_c
 
 
+def _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed):
+    """Issue #6: for any seeded stream, any ``inflight_depth`` d >= 1
+    yields per-query scores bitwise-identical to the sequential d=1
+    clock, and modeled throughput is monotonically non-decreasing in d
+    (event-free streams: a re-issue would change byte demand)."""
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=4.0, max_size=12).sample(rng, 16)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), 0.0))
+    prev_qps = None
+    base = None
+    for d in sorted({1, max(1, depth // 2), depth}):
+        eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+            n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=2,
+            inflight_depth=d))
+        res, stats = eng.serve(reqs)
+        assert stats.completed == len(reqs)
+        assert stats.inflight_depth == d
+        if base is None:
+            base = {r.rid: r.outputs for r in res}
+        else:
+            for r in res:
+                assert np.array_equal(r.outputs, base[r.rid]), (d, r.rid)
+        if prev_qps is not None:
+            assert stats.throughput_qps >= prev_qps * (1 - 1e-9), \
+                (d, prev_qps, stats.throughput_qps)
+        prev_qps = stats.throughput_qps
+
+
 # --------------------------------------------------------- property form
 @settings(max_examples=10, deadline=None)
 @given(n_cn=st.integers(1, 3), m_mn=st.integers(2, 5),
@@ -186,6 +219,13 @@ def test_cache_bitwise_and_bytes_random_streams(alpha, cache_kb, policy,
         seed=seed)
 
 
+@settings(max_examples=10, deadline=None)
+@given(n_cn=st.integers(1, 3), m_mn=st.integers(2, 5),
+       depth=st.integers(1, 8), seed=st.integers(0, 999))
+def test_pipeline_depth_invariance_random_streams(n_cn, m_mn, depth, seed):
+    _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed)
+
+
 # ------------------------------------------------- pinned-config fallback
 @pytest.mark.parametrize("n_cn,m_mn,nrep,nmp_count", [
     (1, 2, 1, 0), (2, 4, 2, 2), (3, 5, 2, 5), (2, 3, 1, 1),
@@ -212,3 +252,10 @@ def test_cache_bitwise_and_bytes_pinned(alpha, cache_mb, policy,
                                         fails, resizes, seed):
     _check_cache_bitwise_and_bytes(2, 4, alpha, cache_mb, policy,
                                    fails, resizes, seed)
+
+
+@pytest.mark.parametrize("n_cn,m_mn,depth,seed", [
+    (2, 4, 4, 0), (1, 2, 2, 7), (3, 5, 8, 13), (2, 3, 6, 42),
+])
+def test_pipeline_depth_invariance_pinned(n_cn, m_mn, depth, seed):
+    _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed)
