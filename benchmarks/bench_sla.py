@@ -1,0 +1,139 @@
+"""Traffic realism & SLA feedback: arrivals, queueing, hedging, control.
+
+Three experiments over the virtual-clock serving stack:
+
+1. **Arrival-process sweep** — the same mean rate served as ``linear``
+   (evenly spaced), ``poisson``, and ``bursty`` (Markov-modulated
+   Poisson) arrivals.  Stochastic arrivals pile queueing delay
+   (arrival -> batch admission, ``ClusterStats.queue_wait_*``) into the
+   tail that the historical evenly-spaced stream structurally could not
+   produce — the Gupta et al. observation that production recommendation
+   traffic is bursty, not fluid.
+
+2. **Flash crowd, SLA controller on/off** — the ``flash_crowd`` preset
+   (Poisson traffic spiking ~5x past the pool's capacity) served with
+   and without ``sla_p99_s``.  With the controller, measured p99 feeds
+   ``serving.autoscaler.SLAController``, which emits live ``Resize``
+   events; the bench asserts the controlled run's p99 beats the
+   uncontrolled one and that the pool returns to its floor.
+
+3. **MN straggler, hedged re-issue on/off** — a mid-stream ``DegradeMN``
+   slows one MN's bus 8x; with ``hedge_multiplier`` set, scans
+   straggling past the multiplier re-issue on replica buses (FlexEMR's
+   optimistic get) and the batch proceeds at the first finisher.  The
+   bench asserts hedging reduces p99 AND that scores stay
+   bitwise-identical — hedging moves time, never values.
+
+  PYTHONPATH=src python -m benchmarks.bench_sla [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro.serving.scenario import (DegradeMN, ScenarioSpec, Workload,
+                                    preset, run_scenario, smoke_topology)
+
+from benchmarks.common import row
+
+SEED = 7
+GAP_S = 1e-6          # shared mean inter-arrival for the sweep
+ARRIVALS = ("linear", "poisson", "bursty")
+
+
+def _arrival_spec(kind: str, n: int) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=f"arrivals-{kind}",
+        topology=smoke_topology(inflight_depth=4, max_wait_s=2e-5),
+        workload=Workload(requests=n, gap_s=GAP_S, arrival=kind,
+                          seed=SEED))
+
+
+def sweep_arrivals(n: int) -> dict:
+    out = {}
+    for kind in ARRIVALS:
+        st = run_scenario(_arrival_spec(kind, n)).stats
+        out[kind] = st
+        row(f"sla_arrival_{kind}_p99_us", st.p99 * 1e6,
+            f"queue_wait mean {st.queue_wait_mean * 1e6:.2f}us "
+            f"p99 {st.queue_wait_p99 * 1e6:.2f}us "
+            f"(same mean rate, {n} reqs)")
+    return out
+
+
+def flash_crowd(n: int) -> dict:
+    spec = preset("flash_crowd")
+    spec = dataclasses.replace(
+        spec, workload=dataclasses.replace(spec.workload, requests=n))
+    rep_on = run_scenario(spec)
+    rep_off = run_scenario(dataclasses.replace(spec, sla_p99_s=None))
+    on, off = rep_on.stats, rep_off.stats
+    row("sla_flash_crowd_p99_on_us", on.p99 * 1e6,
+        f"controller held the crowd: {on.sla_actions} resize actions, "
+        f"final pool {{{rep_on.final_n_cn} CN, {rep_on.final_m_mn} MN}}")
+    row("sla_flash_crowd_p99_off_us", off.p99 * 1e6,
+        f"uncontrolled baseline ({off.p99 / on.p99:.2f}x the "
+        f"controlled tail)")
+    if not on.sla_actions:
+        raise AssertionError("SLA controller never acted on the crowd")
+    if not on.p99 < off.p99:
+        raise AssertionError(
+            f"controller failed to hold p99: on={on.p99:g} "
+            f"off={off.p99:g}")
+    if (rep_on.final_n_cn, rep_on.final_m_mn) != (spec.topology.n_cn,
+                                                  spec.topology.m_mn):
+        raise AssertionError(
+            f"pool did not return to its floor: "
+            f"{{{rep_on.final_n_cn}, {rep_on.final_m_mn}}}")
+    return {"on": on, "off": off}
+
+
+def straggler_hedge(n: int, factor: float = 8.0) -> dict:
+    base = ScenarioSpec(
+        name="straggler",
+        topology=smoke_topology(inflight_depth=4, max_wait_s=2e-5),
+        workload=Workload(requests=n, gap_s=GAP_S, seed=SEED),
+        events=(DegradeMN(5e-5, mn=1, factor=factor),))
+    rep_off = run_scenario(base)
+    rep_on = run_scenario(dataclasses.replace(
+        base, topology=dataclasses.replace(base.topology,
+                                           hedge_multiplier=2.0)))
+    on, off = rep_on.stats, rep_off.stats
+    row("sla_hedge_p99_off_us", off.p99 * 1e6,
+        f"one MN bus degraded {factor:g}x mid-stream, no hedging")
+    row("sla_hedge_p99_on_us", on.p99 * 1e6,
+        f"{on.hedges} hedged scans, {on.hedge_wins} won "
+        f"(-{100 * (1 - on.p99 / off.p99):.1f}% p99)")
+    if not on.hedges:
+        raise AssertionError("no hedges issued against the straggler")
+    if not on.p99 < off.p99:
+        raise AssertionError(
+            f"hedging failed to cut p99: on={on.p99:g} off={off.p99:g}")
+    if not rep_on.bitwise_equal(rep_off):
+        raise AssertionError("hedging broke bitwise score parity")
+    return {"on": on, "off": off}
+
+
+def run(smoke: bool = False) -> dict:
+    n_sweep = 256 if smoke else 512
+    n_flash = 960          # the preset's full arc (up AND back down)
+    n_strag = 256 if smoke else 512
+    return {
+        "arrivals": sweep_arrivals(n_sweep),
+        "flash_crowd": flash_crowd(n_flash),
+        "straggler": straggler_hedge(n_strag),
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized runs (same assertions)")
+    args = p.parse_args(argv)
+    run(smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

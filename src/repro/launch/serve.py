@@ -11,6 +11,8 @@
       --cns 3 --mns 6 --elastic              # diurnal resize schedule
   PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
       --alpha 1.05 --cache-mb 64             # skewed stream + CN row cache
+  PYTHONPATH=src python -m repro.launch.serve --arch rm1 --cluster \
+      --arrival poisson --sla-p99-ms 60      # live traffic + SLA feedback
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
 
 Cluster serving goes through the declarative scenario API
@@ -65,10 +67,16 @@ def spec_from_flags(args) -> ScenarioSpec:
             n_replicas=args.replicas, use_kernel=args.use_kernel,
             mn_types=mn_types, cache_mb=args.cache_mb,
             cache_policy=args.cache_policy,
-            inflight_depth=args.inflight_depth),
+            inflight_depth=args.inflight_depth,
+            hedge_multiplier=args.hedge_multiplier),
         workload=Workload(requests=args.requests, mean_size=8.0,
                           max_size=4 * args.batch, alpha=args.alpha,
-                          gap_s=0.001, seed=args.seed),
+                          gap_s=0.001, seed=args.seed,
+                          arrival=args.arrival,
+                          burstiness=args.burstiness,
+                          trace_path=args.trace),
+        sla_p99_s=(args.sla_p99_ms / 1e3
+                   if args.sla_p99_ms is not None else None),
         events=tuple(events),
     )
 
@@ -127,6 +135,26 @@ def main(argv=None):
                         "the pre-pipeline model)")
     p.add_argument("--cache-policy", default="lru", choices=["lru", "lfu"],
                    help="hot-row cache eviction policy")
+    p.add_argument("--arrival", default="linear",
+                   choices=["linear", "poisson", "bursty", "trace"],
+                   help="arrival process of the request stream (cluster "
+                        "mode; linear reproduces the historical evenly-"
+                        "spaced stream byte-for-byte)")
+    p.add_argument("--burstiness", type=float, default=4.0,
+                   help="bursty arrivals: burst/lull rate swing factor "
+                        "(>= 1; ignored by other processes)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="JSON arrival-timestamp trace file "
+                        "(requires --arrival trace)")
+    p.add_argument("--sla-p99-ms", type=float, default=None,
+                   help="p99 latency SLA in ms (cluster mode): enables "
+                        "the feedback SLAController, which watches the "
+                        "measured sliding-window p99 and emits live "
+                        "Resize events to hold it under the target")
+    p.add_argument("--hedge-multiplier", type=float, default=0.0,
+                   help="hedged re-issue of straggling MN scans: re-issue "
+                        "on a replica once a scan exceeds this multiple "
+                        "of its nominal time (0 disables)")
     p.add_argument("--no-kernel", dest="use_kernel", action="store_false",
                    default=True)
     args = p.parse_args(argv)

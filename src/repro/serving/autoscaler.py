@@ -1,5 +1,19 @@
-"""Diurnal autoscaling policy for the elastic ClusterEngine (paper §III,
-Fig. 2b/11).
+"""Autoscaling for the elastic ClusterEngine: a schedule-driven diurnal
+policy (paper §III, Fig. 2b/11) and a feedback-driven SLA controller.
+
+Two complementary controllers live here:
+
+- :class:`Autoscaler` — *schedule-driven*: maps the diurnal load curve
+  onto timed ``ResizeEvent``s ahead of time.  Right when demand is
+  forecastable (the paper's provisioning argument), blind to surprises.
+- :class:`SLAController` — *feedback-driven*: watches a sliding window
+  of measured completion latencies against an SLA target on p99
+  (``ScenarioSpec.sla_p99_s``) and emits ``Resize`` events through the
+  live typed timeline the moment the measured tail leaves the band —
+  scale up when p99 breaches the target, scale back down once it falls
+  below ``band_low x`` target.  Right when demand is NOT forecastable
+  (flash crowds, spikes compounded with failures — Gupta et al.'s
+  bursty production traffic).
 
 The paper's provisioning argument: a fixed-proportion deployment pins the
 peak-hour {n CN, m MN} all day, and the diurnal trough (~40% of peak,
@@ -23,6 +37,7 @@ Eq. 1-3) are cross-checkable: a fixed-peak plan's idle unit-hours equal
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
@@ -31,6 +46,7 @@ from repro.core import hardware as hw
 from repro.core.allocator import diurnal_load
 from repro.core.hardware import NODE_TYPES
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
+from repro.serving.scenario import Resize, nearest_rank
 
 
 class ResizeEvent(NamedTuple):
@@ -131,6 +147,87 @@ class Autoscaler:
                 out.append(ResizeEvent(i * duration_s / steps, n, m))
                 prev = (n, m)
         return out
+
+
+# ---------------------------------------------------- SLA feedback loop
+@dataclass(frozen=True)
+class SLAControllerConfig:
+    """Feedback-control knobs.  The controller holds measured p99 inside
+    ``[band_low * sla_p99_s, sla_p99_s]``: above the target it scales
+    both pools up by ``step``; below the lower band edge it scales back
+    down — hysteresis that keeps a noisy tail from thrashing the pool.
+    ``window`` completions form the sliding p99 estimate (nearest-rank,
+    the serving layer's percentile convention) and ``cooldown``
+    completions must pass between actions so each resize's effect is
+    *measured* before the next decision."""
+    sla_p99_s: float
+    window: int = 32
+    band_low: float = 0.5
+    cooldown: int = 16
+    step: int = 1
+    max_scale: int = 4            # pool ceiling: max_scale x initial
+
+
+class SLAController:
+    """Measured-p99 feedback autoscaler.
+
+    The dispatcher calls :meth:`observe` once per query completion with
+    the virtual finish time and measured latency; the controller
+    returns ``Resize`` events to enqueue into the live timeline (empty
+    list almost always).  The initial topology is the scale-*down*
+    floor — the replicated embedding tables were provisioned for that
+    pool, so the controller only ever adds capacity on top and releases
+    it again (the paper's capacity-floor argument, applied to feedback
+    control).  Emission timestamps are clamped monotone so the audit
+    trail stays time-ordered.
+    """
+
+    def __init__(self, cfg: SLAControllerConfig, n_cn: int, m_mn: int):
+        if cfg.sla_p99_s <= 0:
+            raise ValueError("sla_p99_s must be positive")
+        if cfg.window < 1 or cfg.cooldown < 0 or cfg.step < 1:
+            raise ValueError("window/cooldown/step out of range")
+        if not 0.0 <= cfg.band_low < 1.0:
+            raise ValueError("band_low must be in [0, 1)")
+        if cfg.max_scale < 1:
+            raise ValueError("max_scale must be >= 1")
+        self.cfg = cfg
+        self.min_cn, self.min_mn = int(n_cn), int(m_mn)
+        self.max_cn = self.min_cn * cfg.max_scale
+        self.max_mn = self.min_mn * cfg.max_scale
+        self.n_cn, self.m_mn = self.min_cn, self.min_mn
+        self._lats: deque = deque(maxlen=cfg.window)
+        self._since = 0             # completions since the last action
+        self._last_emit = 0.0
+        self.actions: List[Resize] = []     # every event ever emitted
+
+    def p99(self) -> float:
+        """Current sliding-window p99 (nan until anything completed)."""
+        return nearest_rank(list(self._lats), 99)
+
+    def observe(self, t_done_s: float, latency_s: float) -> List[Resize]:
+        """Feed one completion; returns the Resize events to enqueue."""
+        self._lats.append(float(latency_s))
+        self._since += 1
+        if (len(self._lats) < self.cfg.window
+                or self._since < self.cfg.cooldown):
+            return []
+        p99 = self.p99()
+        n, m = self.n_cn, self.m_mn
+        if p99 > self.cfg.sla_p99_s:
+            n = min(n + self.cfg.step, self.max_cn)
+            m = min(m + self.cfg.step, self.max_mn)
+        elif p99 < self.cfg.band_low * self.cfg.sla_p99_s:
+            n = max(n - self.cfg.step, self.min_cn)
+            m = max(m - self.cfg.step, self.min_mn)
+        if (n, m) == (self.n_cn, self.m_mn):
+            return []
+        self.n_cn, self.m_mn = n, m
+        self._since = 0
+        self._last_emit = max(self._last_emit, float(t_done_s))
+        ev = Resize(self._last_emit, n_cn=n, m_mn=m)
+        self.actions.append(ev)
+        return [ev]
 
 
 # ------------------------------------------------------- TCO accounting

@@ -156,6 +156,14 @@ class ClusterConfig:
                                   # with the pre-pipeline engine), >1 =
                                   # pipelined overlap on per-resource
                                   # FIFO queues (serving.pipeline)
+    hedge_multiplier: float = 0.0  # straggler mitigation (FlexEMR
+                                  # optimistic get): a scan projected to
+                                  # exceed hedge_multiplier x its nominal
+                                  # (degradation-free) duration is
+                                  # re-issued on the fastest live replica
+                                  # at the detection instant — both
+                                  # issues charged, first finisher wins.
+                                  # 0 disables (the parity default).
     seed: int = 0                 # the stream seed this engine serves
                                   # (dlrm_request_stream convention); the
                                   # serving path itself holds no RNG, so
@@ -200,6 +208,17 @@ class ClusterStats:
     makespan_s: float = 0.0       # last batch completion on the clock
     throughput_qps: float = float("nan")   # completed / makespan
     admission_wait_s: float = 0.0  # MN-stage admission stall, all batches
+    # per-query queueing delay (arrival -> batch admission, i.e. the
+    # first resource start of the query's first batch).  Nearest-rank
+    # p99; nan when nothing completed (the mean_latency contract).
+    queue_wait_mean: float = float("nan")
+    queue_wait_p99: float = float("nan")
+    # straggler mitigation (hedged re-issue of slow MN scans)
+    degrades: int = 0             # DegradeMN events applied
+    hedges: int = 0               # scans re-issued on an alternate replica
+    hedge_wins: int = 0           # hedges that finished before the original
+    # SLA feedback control (serving.autoscaler.SLAController)
+    sla_actions: int = 0          # Resize events the controller emitted
     resource_busy_s: Dict[str, float] = field(default_factory=dict)
     resource_queue_s: Dict[str, float] = field(default_factory=dict)
     resource_util: Dict[str, float] = field(default_factory=dict)
@@ -234,6 +253,11 @@ class ClusterEngine:
         self.mn_types = self.cfg.resolved_mn_types()
         self.mn_nmp = [NODE_TYPES[t].nmp for t in self.mn_types]
         self.mn_bw = [NODE_TYPES[t].mem_bw for t in self.mn_types]
+        # per-MN bandwidth degradation (DegradeMN straggler injection):
+        # MN j scans at mem_bw / mn_slow[j]; 1.0 = nominal, and a
+        # multiply by 1.0 is float-exact so an all-ones pool is bitwise-
+        # identical to the pre-degrade engine
+        self.mn_slow = [1.0] * self.m_mn
         self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
         self.capacities = self._pool_capacities(self.m_mn)
         self.alloc = em.allocate_heterogeneous(
@@ -269,6 +293,13 @@ class ClusterEngine:
         self.reissues = 0
         self.recoveries = 0
         self.resizes = 0
+        self.degrades = 0
+        self.hedges = 0
+        self.hedge_wins = 0
+        # per-MN (tid, bytes) split of the most recent _execute's scans:
+        # the hedging planner re-issues a straggler's tables on their
+        # fastest live alternate replicas from this
+        self._last_scan: Dict[int, List[Tuple[int, float]]] = {}
         self.migration_bytes = 0.0
         self.mn_access_bytes = np.zeros(self.m_mn)
         self.mn_gather_bytes = np.zeros(self.m_mn)
@@ -464,6 +495,24 @@ class ClusterEngine:
                                        mn_weights=self._route_w)
         self._sync_caches()
 
+    def degrade_mn(self, j: int, factor: float = 1.0) -> bool:
+        """Slow MN `j`'s memory bus by `factor` (>= 1.0; 1.0 restores
+        nominal speed) — straggler injection for the hedged re-issue
+        path.  Routing, placement, and scores are untouched: only the
+        virtual clock's scan durations move.  Returns whether the
+        slowdown state actually changed (an identity degrade is a
+        recorded no-op, mirroring identity resizes)."""
+        if not 0 <= j < self.m_mn:
+            raise ValueError(f"MN id {j} outside pool of {self.m_mn}")
+        if factor < 1.0:
+            raise ValueError(f"degrade factor must be >= 1.0, "
+                             f"got {factor!r}")
+        changed = float(factor) != self.mn_slow[j]
+        self.mn_slow[j] = float(factor)
+        if changed:
+            self.degrades += 1
+        return changed
+
     # --------------------------------------------------------- elasticity
     def resize(self, n_cn: Optional[int] = None, m_mn: Optional[int] = None,
                mn_type: Optional[str] = None) -> em.MigrationPlan:
@@ -517,6 +566,10 @@ class ClusterEngine:
             self.mn_types = new_types
             self.mn_nmp = [NODE_TYPES[t].nmp for t in new_types]
             self.mn_bw = [NODE_TYPES[t].mem_bw for t in new_types]
+            # joining MNs scan at nominal speed; a departing MN takes
+            # its slowdown with it
+            self.mn_slow = (self.mn_slow[:new_m]
+                            + [1.0] * (new_m - len(self.mn_slow)))
             self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
             self.capacities = caps
             self.dead = dead
@@ -594,6 +647,7 @@ class ClusterEngine:
         cache = self.caches[task] if self.caches else None
         batch_probes = 0
         batch_hit_bytes = 0.0
+        self._last_scan = {}
         for j, tids in enumerate(shards):
             if not tids:
                 continue
@@ -602,6 +656,8 @@ class ClusterEngine:
             sub = idx[:, tids, :]
             pooled[:, tids, :] = np.asarray(self._mn_pool(j, tids, sub))
             per_table = (sub >= 0).sum(axis=(0, 2))
+            self._last_scan[j] = [(int(t), float(pt) * row_b) for t, pt
+                                  in zip(tids, per_table.tolist())]
             self.hotness.update(tids, per_table)
             nvalid = int(per_table.sum())
             if cache is not None and not self.mn_nmp[j]:
@@ -631,6 +687,7 @@ class ClusterEngine:
               failures: Sequence[Tuple[float, int]] = (),
               resizes: Sequence[Tuple[float, int, int]] = (),
               events: Sequence = (),
+              controller=None,
               ) -> Tuple[List[Result], ClusterStats]:
         """Serve a request stream under a typed event timeline.
 
@@ -650,12 +707,20 @@ class ClusterEngine:
         schedule-aware *maximum* pool, so a failure scheduled after a
         timed grow is accepted.
 
+        ``controller`` is an optional SLA feedback controller
+        (``serving.autoscaler.SLAController``): the dispatcher feeds it
+        every completion (virtual finish time, measured latency) and
+        enqueues whatever ``Resize`` events it emits into the live
+        timeline — the declarative front door builds one when
+        ``ScenarioSpec.sla_p99_s`` is set.
+
         Execution is real JAX; time is a virtual clock advanced with the
         analytic stage model, so latencies are deterministic and
         comparable to ServingUnitModel / ClusterSim."""
         from repro.serving.timeline import TimelineDispatcher, legacy_events
         evs = legacy_events(failures, resizes) + list(events or ())
-        return TimelineDispatcher(self, requests, evs).run()
+        return TimelineDispatcher(self, requests, evs,
+                                  controller=controller).run()
 
     # ------------------------------------------------------- validation
     def validate_latency_model(self) -> Dict[str, float]:
@@ -678,11 +743,22 @@ class ClusterEngine:
         analytic_mn = st.t_sparse + st.t_comm_out
         mn_measured = (self._mn_stage_max_sum / self._n_batches
                        if self._n_batches else 0.0)
-        engine = st.t_pre + st.t_comm_in + mn_measured + st.t_dense
+        # the analytic cross-check models an UNLOADED single batch: no
+        # query waits for admission, so the queue-wait term is exactly
+        # 0.0 by construction.  The assert pins that contract — if the
+        # queueing-delay accounting ever leaks a nonzero term into this
+        # path, the engine/analytic ratio would silently shift.
+        queue_wait_s = 0.0
+        assert queue_wait_s == 0.0, (
+            "validate_latency_model assumes zero queueing; the "
+            "unloaded-path queue-wait term must be exactly 0.0")
+        engine = (st.t_pre + st.t_comm_in + queue_wait_s + mn_measured
+                  + st.t_dense)
         return {"analytic_s": analytic, "engine_s": engine,
                 "ratio": engine / analytic if analytic else 1.0,
                 "engine_mn_stage_s": mn_measured,
                 "analytic_mn_stage_s": analytic_mn,
+                "queue_wait_s": queue_wait_s,
                 "mn_stage_ratio": (mn_measured / analytic_mn
                                    if analytic_mn else 1.0)}
 

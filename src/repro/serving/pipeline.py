@@ -169,6 +169,27 @@ class BatchTrace:
     done: float
     reissues: int                   # in-flight MN losses this batch ate
     qids: Tuple[int, ...]           # member queries
+    hedges: Tuple["HedgeIssue", ...] = ()   # straggler re-issues
+
+
+@dataclass(frozen=True)
+class HedgeIssue:
+    """One hedged re-issue of a straggling MN scan (FlexEMR's
+    optimistic get): the scan's tables re-issued on an alternate
+    replica's bus at the detection instant.  Both the original and the
+    hedge are charged to their buses; the batch proceeds at the first
+    finisher."""
+    src_mn: int                     # the straggling MN
+    alt_mn: int                     # the replica bus the hedge runs on
+    detect_s: float                 # when the straggle was detected
+    start_s: float                  # hedge start on the alternate bus
+    dur_s: float                    # hedge scan duration
+    bytes_b: float                  # bytes the hedge moved (charged to alt)
+    won: bool                       # hedge finished before the original
+
+    @property
+    def end_s(self) -> float:
+        return self.start_s + self.dur_s
 
 
 @dataclass
@@ -179,7 +200,10 @@ class MNPlan:
     batch wait — only then does the stage-done time come from the
     general per-resource chain; otherwise it is the sequential clock's
     closed-form gate (``mn_start + t_gate``), preserving depth-1
-    bitwise parity (see module docstring).
+    bitwise parity (see module docstring).  ``hedges`` (always empty
+    when ``ClusterConfig.hedge_multiplier`` is 0) lists the straggler
+    re-issues; a plan with hedges is always ``queued`` — the closed-
+    form gate knows nothing about alternate buses.
     """
     mn_start: float
     scans: List[Tuple[int, float, float]]   # (mn, start, duration)
@@ -189,6 +213,7 @@ class MNPlan:
     gather_dur: float
     queued: bool
     end: float                      # planned stage-done time
+    hedges: Tuple[HedgeIssue, ...] = ()
 
 
 def fit_clocks(clocks: List[ResourceClock], n: int, prefix: str,

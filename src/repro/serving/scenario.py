@@ -58,7 +58,8 @@ from typing import (Any, ClassVar, Dict, List, Optional, Sequence, Tuple,
 import numpy as np
 
 from repro.core.hardware import NODE_TYPES
-from repro.data.queries import QueryDist, dlrm_batch
+from repro.data.queries import (ARRIVALS, ArrivalProcess, QueryDist,
+                                dlrm_batch, load_trace)
 from repro.serving.cluster import (ClusterConfig, ClusterEngine,
                                    ClusterStats, _validate_mn_types)
 from repro.serving.engine import Request, Result
@@ -135,9 +136,22 @@ class SetWorkload(ScenarioEvent):
     kind: ClassVar[str] = "set_workload"
 
 
+@dataclass(frozen=True)
+class DegradeMN(ScenarioEvent):
+    """Slow MN ``mn``'s memory bus by ``factor`` (>= 1.0; 1.0 restores
+    nominal speed) — the straggler-injection event behind the hedged
+    re-issue story (FlexEMR's optimistic get).  A degraded MN scans its
+    bytes at ``mem_bw / factor``; everything else (routing, scores,
+    gather bytes) is untouched, so a run whose degrades all carry
+    ``factor=1.0`` is bitwise-identical to one without them."""
+    mn: int = 0
+    factor: float = 1.0
+    kind: ClassVar[str] = "degrade_mn"
+
+
 EVENT_TYPES: Dict[str, Type[ScenarioEvent]] = {
     c.kind: c for c in (FailMN, RecoverMN, Resize, ReloadParams,
-                        ReplanPlacement, SetWorkload)
+                        ReplanPlacement, SetWorkload, DegradeMN)
 }
 
 
@@ -224,15 +238,21 @@ def validate_events(events: Sequence[ScenarioEvent], m_mn: int) -> None:
                 raise ValueError(
                     f"reload_params seed must be an integer, "
                     f"got {ev.seed!r}")
-    # bounds pass in fire order: the maximum pool a fail/recover id may
-    # reference is the largest m_mn provisioned AT OR BEFORE its fire
-    # time — a grow scheduled after the event cannot justify it (the
-    # event would silently no-op against the not-yet-grown pool)
+        elif isinstance(ev, DegradeMN):
+            if (not _is_num(ev.factor) or not math.isfinite(ev.factor)
+                    or ev.factor < 1.0):
+                raise ValueError(
+                    f"degrade_mn factor must be a finite number >= 1.0 "
+                    f"(1.0 restores nominal speed), got {ev.factor!r}")
+    # bounds pass in fire order: the maximum pool a fail/recover/degrade
+    # id may reference is the largest m_mn provisioned AT OR BEFORE its
+    # fire time — a grow scheduled after the event cannot justify it
+    # (the event would silently no-op against the not-yet-grown pool)
     max_m = int(m_mn)
     for ev in sort_events(events):
         if isinstance(ev, Resize) and ev.m_mn is not None:
             max_m = max(max_m, int(ev.m_mn))
-        elif isinstance(ev, (FailMN, RecoverMN)):
+        elif isinstance(ev, (FailMN, RecoverMN, DegradeMN)):
             if not _is_int(ev.mn) or not 0 <= ev.mn < max_m:
                 raise ValueError(
                     f"{ev.kind} event targets MN {ev.mn!r} outside the "
@@ -268,8 +288,21 @@ class Topology:
     # max batches concurrently inside the MN stage (1 = sequential
     # clock, bitwise-identical to the pre-pipeline model)
     inflight_depth: int = 1
+    # hedged re-issue of straggling MN scans: a scan whose projected
+    # duration exceeds hedge_multiplier x its nominal (degradation-free)
+    # duration is re-issued on the fastest live replica at the detection
+    # instant — both issues are charged, the first finisher wins.
+    # 0.0 disables hedging (the parity default).
+    hedge_multiplier: float = 0.0
+    # stall before a batch struck by a mid-stage MN failure re-issues
+    # (ClusterConfig.mn_recovery_s).  None keeps the engine default
+    # (failure-model recovery cost); scenarios running on compressed
+    # virtual timescales set an on-scale value.
+    mn_recovery_s: Optional[float] = None
 
     def cluster_config(self, seed: int = 0) -> ClusterConfig:
+        extra = ({} if self.mn_recovery_s is None
+                 else {"mn_recovery_s": self.mn_recovery_s})
         return ClusterConfig(
             n_cn=self.n_cn, m_mn=self.m_mn, batch_size=self.batch_size,
             max_wait_s=self.max_wait_s, n_replicas=self.n_replicas,
@@ -279,14 +312,17 @@ class Topology:
                       else None),
             cache_mb=self.cache_mb, cache_policy=self.cache_policy,
             inflight_depth=self.inflight_depth,
-            seed=seed)
+            hedge_multiplier=self.hedge_multiplier,
+            seed=seed, **extra)
 
 
 @dataclass(frozen=True)
 class Workload:
     """The base workload phase: a seeded heavy-tailed request stream
     (``data.queries.dlrm_request_stream`` convention).  ``SetWorkload``
-    events override these parameters from their fire time onward."""
+    events override the distribution/rate parameters from their fire
+    time onward; the arrival *process* (``arrival``) is stream-wide —
+    phases re-shape its rate (``gap_s``), never its kind."""
     requests: int = 32
     mean_size: float = 8.0
     sigma: float = 1.0
@@ -294,6 +330,13 @@ class Workload:
     alpha: float = 0.0
     gap_s: float = 0.002
     seed: int = 0
+    # arrival process: linear | poisson | bursty | trace
+    # (data.queries.ArrivalProcess).  linear reproduces the historical
+    # evenly-spaced stream byte-for-byte; the stochastic processes draw
+    # from a separate derived RNG so payloads never move.
+    arrival: str = "linear"
+    burstiness: float = 4.0       # bursty: burst/lull rate swing factor
+    trace_path: Optional[str] = None   # trace: JSON timestamp file
 
 
 @dataclass(frozen=True)
@@ -309,10 +352,16 @@ class ScenarioSpec:
     topology: Topology = Topology()
     workload: Workload = Workload()
     events: Tuple[ScenarioEvent, ...] = ()
+    # SLA target on measured p99 latency (seconds).  When set,
+    # run_scenario attaches a feedback SLAController
+    # (serving.autoscaler) that watches a sliding window of completion
+    # latencies and emits Resize events through the live timeline.
+    # None (the default) keeps serving schedule-driven.
+    sla_p99_s: Optional[float] = None
 
     # ---------------------------------------------------------- serde
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "name": self.name,
             "description": self.description,
             "model": dataclasses.asdict(self.model),
@@ -322,6 +371,9 @@ class ScenarioSpec:
             "workload": dataclasses.asdict(self.workload),
             "events": [e.to_dict() for e in self.events],
         }
+        if self.sla_p99_s is not None:
+            d["sla_p99_s"] = self.sla_p99_s
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
@@ -329,7 +381,7 @@ class ScenarioSpec:
         if "name" not in d:
             raise ValueError("scenario spec needs a name")
         known = {"name", "description", "model", "topology", "workload",
-                 "events"}
+                 "events", "sla_p99_s"}
         unknown = sorted(set(d) - known)
         if unknown:
             raise ValueError(
@@ -344,6 +396,7 @@ class ScenarioSpec:
             topology=_build(Topology, topo, "topology"),
             workload=_build(Workload, d.get("workload") or {}, "workload"),
             events=tuple(event_from_dict(e) for e in d.get("events") or ()),
+            sla_p99_s=d.get("sla_p99_s"),
         )
 
     def to_json(self) -> str:
@@ -379,9 +432,12 @@ class ScenarioSpec:
                     f"{section} {name} must be an integer, got {v!r}")
         for section, name, v in (("topology", "max_wait_s", t.max_wait_s),
                                  ("topology", "cache_mb", t.cache_mb),
+                                 ("topology", "hedge_multiplier",
+                                  t.hedge_multiplier),
                                  ("workload", "mean_size", w.mean_size),
                                  ("workload", "sigma", w.sigma),
                                  ("workload", "alpha", w.alpha),
+                                 ("workload", "burstiness", w.burstiness),
                                  ("workload", "gap_s", w.gap_s)):
             if not _is_num(v):
                 raise ValueError(
@@ -406,12 +462,36 @@ class ScenarioSpec:
             raise ValueError(f"unknown memory-node type {t.mn_type!r}")
         if t.mn_types is not None:
             _validate_mn_types(t.mn_types, t.m_mn)
+        if t.hedge_multiplier < 0:
+            raise ValueError("topology hedge_multiplier must be >= 0 "
+                             "(0 disables hedged re-issue)")
+        if t.mn_recovery_s is not None and (
+                not _is_num(t.mn_recovery_s) or t.mn_recovery_s < 0):
+            raise ValueError(f"topology mn_recovery_s must be a "
+                             f"non-negative number when set, got "
+                             f"{t.mn_recovery_s!r}")
         if w.requests < 0:
             raise ValueError("workload requests must be >= 0")
         if w.mean_size <= 0 or w.max_size < 1:
             raise ValueError("workload query sizes must be positive")
         if w.sigma < 0 or w.alpha < 0 or w.gap_s < 0:
             raise ValueError("workload sigma/alpha/gap_s must be >= 0")
+        if w.arrival not in ARRIVALS:
+            raise ValueError(f"unknown workload arrival process "
+                             f"{w.arrival!r} (known: {ARRIVALS})")
+        if w.burstiness < 1.0:
+            raise ValueError("workload burstiness must be >= 1.0")
+        if (w.arrival == "trace") != (w.trace_path is not None):
+            raise ValueError(
+                "workload trace_path must be set exactly when "
+                "arrival='trace' (a path on another process is a "
+                "config bug, not a silent no-op)")
+        if w.trace_path is not None and not isinstance(w.trace_path, str):
+            raise ValueError("workload trace_path must be a string path")
+        if self.sla_p99_s is not None and (
+                not _is_num(self.sla_p99_s) or self.sla_p99_s <= 0):
+            raise ValueError(f"sla_p99_s must be a positive number, "
+                             f"got {self.sla_p99_s!r}")
         validate_events(self.events, t.m_mn)
 
 
@@ -448,14 +528,29 @@ def plan_workload(spec: ScenarioSpec, model_cfg
     """Build the scenario's request stream, honoring ``SetWorkload``
     phase changes.
 
-    Arrivals are linearly spaced at the phase's ``gap_s`` from the phase
-    start; a request's phase is the one whose ``SetWorkload`` fired at
-    or before its arrival.  One ``np.random.RandomState(workload.seed)``
-    drives sizes and payloads, with sizes sampled per phase chunk — a
-    single-phase scenario therefore reproduces
+    Arrivals come from the workload's :class:`~repro.data.queries.
+    ArrivalProcess` (``linear`` | ``poisson`` | ``bursty`` | ``trace``),
+    realigned to each phase's declared start: when a ``SetWorkload``
+    fires at ``time_s``, the process restarts from exactly ``time_s``
+    under the new ``gap_s`` — for ``linear`` the first post-event
+    arrival lands *on* the phase start and subsequent arrivals are
+    spaced at the new gap.  (Historical bug, fixed here: the old
+    planner re-based on the stale-gap-extrapolated candidate arrival
+    instead of the event's ``time_s``, so every later arrival drifted
+    by the extrapolation overshoot and the first post-event arrival
+    still used the old phase's gap.  No bitwise-compat shim is needed:
+    the legacy-parity grid never crosses a phase boundary, and
+    single-phase streams are unaffected.)  A request's phase is the one
+    whose ``SetWorkload`` fired at or before its arrival.
+
+    One ``np.random.RandomState(workload.seed)`` drives sizes and
+    payloads, with sizes sampled per phase chunk, and the arrival
+    process draws from a *separate* derived RNG — a single-phase
+    ``linear`` scenario therefore reproduces
     ``data.queries.dlrm_request_stream(cfg, n, seed, dist, gap_s)``
-    byte-for-byte, which is what keeps legacy-kwarg runs bitwise-equal
-    to their spec equivalents.
+    byte-for-byte (payloads AND timestamps), which is what keeps
+    legacy-kwarg runs bitwise-equal to their spec equivalents; the
+    stochastic processes move only the timestamps.
     """
     w = spec.workload
     sw = sort_events([e for e in spec.events if isinstance(e, SetWorkload)])
@@ -464,10 +559,15 @@ def plan_workload(spec: ScenarioSpec, model_cfg
     phases = [PhasePlan(index=0, t_start=0.0, **cur)]
     arrivals: List[float] = []
     pids: List[int] = []
+    proc = ArrivalProcess(
+        w.arrival, w.gap_s, seed=w.seed, burstiness=w.burstiness,
+        trace=(load_trace(w.trace_path) if w.arrival == "trace" else None))
     k = 0
-    base_t, base_i = 0.0, 0
     for i in range(w.requests):
-        t = base_t + cur["gap_s"] * (i - base_i)
+        t = proc.next()
+        # a phase change at or before the candidate arrival realigns the
+        # process to the event's declared start — the candidate was
+        # generated under the stale phase and is discarded
         while k < len(sw) and sw[k].time_s <= t:
             ev = sw[k]
             k += 1
@@ -476,9 +576,10 @@ def plan_workload(spec: ScenarioSpec, model_cfg
                 v = getattr(ev, name)
                 if v is not None:
                     cur[name] = v
-            base_t, base_i = t, i
+            proc.realign(ev.time_s, cur["gap_s"])
             phases.append(PhasePlan(index=len(phases), t_start=ev.time_s,
                                     rid_start=i, rid_end=i, **cur))
+            t = proc.next()
         arrivals.append(t)
         pids.append(len(phases) - 1)
 
@@ -587,7 +688,19 @@ class ScenarioReport:
             f"failures={st.failures} recoveries={st.recoveries} "
             f"resizes={st.resizes} reroutes={st.reroutes} "
             f"reinits={st.reinits} reissues={st.reissues}",
+            f"[scenario] queueing delay (arrival -> admission): "
+            f"mean {st.queue_wait_mean * 1e3:.3f}ms "
+            f"p99 {st.queue_wait_p99 * 1e3:.3f}ms",
         ]
+        if st.hedges or st.degrades:
+            lines.append(
+                f"[scenario] straggler mitigation: {st.degrades} "
+                f"degrade events, {st.hedges} hedged scans "
+                f"({st.hedge_wins} won by the hedge)")
+        if st.sla_actions:
+            lines.append(
+                f"[scenario] SLA feedback: controller emitted "
+                f"{st.sla_actions} resize action(s)")
         mem = sum(st.mn_access_bytes) + st.retired_access_bytes
         gat = sum(st.mn_gather_bytes) + st.retired_gather_bytes
         if any("nmp" in t for t in self.mn_types) and mem:
@@ -630,13 +743,32 @@ class ScenarioReport:
         return lines
 
 
+def nearest_rank(values, q: float) -> float:
+    """Documented nearest-rank percentile: the ``ceil(q/100 * n)``-th
+    smallest observation (1-indexed) — always an *actual* sample.
+
+    ``np.percentile``'s default linear interpolation made p95/p99
+    depend on the sample count in surprising ways at smoke scale (a
+    32-sample p99 was an invented point 99% of the way between the two
+    largest observations); nearest-rank is the standard tail-SLA
+    convention (a measured latency some query actually saw) and is what
+    every serving-layer percentile in this repo now means.  Empty input
+    returns nan, matching the ``mean_latency`` contract."""
+    a = np.sort(np.asarray(values, dtype=float))
+    n = a.size
+    if n == 0:
+        return float("nan")
+    k = max(int(math.ceil(q / 100.0 * n)), 1) - 1
+    return float(a[min(k, n - 1)])
+
+
 def _lat_stats(lats: List[float]) -> Tuple[float, float, float, float]:
     if not lats:
         nan = float("nan")
         return nan, nan, nan, nan
-    a = np.asarray(lats)
-    return (float(a.mean()), float(np.percentile(a, 50)),
-            float(np.percentile(a, 95)), float(np.percentile(a, 99)))
+    a = np.sort(np.asarray(lats, dtype=float))
+    return (float(a.mean()), nearest_rank(a, 50),
+            nearest_rank(a, 95), nearest_rank(a, 99))
 
 
 def run_scenario(spec: ScenarioSpec, model=None, params=None, stream=None
@@ -665,7 +797,15 @@ def run_scenario(spec: ScenarioSpec, model=None, params=None, stream=None
                     else stream)
     engine = ClusterEngine(
         model, params, spec.topology.cluster_config(seed=spec.workload.seed))
-    results, stats = engine.serve(reqs, events=spec.events)
+    controller = None
+    if spec.sla_p99_s is not None:
+        from repro.serving.autoscaler import (SLAController,
+                                              SLAControllerConfig)
+        controller = SLAController(
+            SLAControllerConfig(sla_p99_s=spec.sla_p99_s),
+            n_cn=spec.topology.n_cn, m_mn=spec.topology.m_mn)
+    results, stats = engine.serve(reqs, events=spec.events,
+                                  controller=controller)
     by_rid = {r.rid: r for r in results}
     phase_stats = []
     for ph in phases:
@@ -794,12 +934,67 @@ def _preset_pipeline_burst() -> ScenarioSpec:
     )
 
 
+def _preset_flash_crowd() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="flash_crowd",
+        description=(
+            "Poisson traffic spikes 10x mid-stream and recedes: queueing "
+            "delay (arrival -> admission) piles into the tail while the "
+            "SLA feedback controller watches the measured p99 against "
+            "sla_p99_s and emits Resize scale-ups through the live "
+            "timeline, then the pool returns to steady state (Gupta et "
+            "al. bursty production traffic; paper Fig. 2b).  Runs on a "
+            "compressed virtual timescale (per-batch service is ~7us at "
+            "smoke scale): the pool starts at its {1 CN, 2 MN} floor, "
+            "the crowd overloads it ~3x, and the controller rides "
+            "measured p99 up to 4x capacity and back down to the floor."),
+        topology=smoke_topology(n_cn=1, m_mn=2, inflight_depth=4,
+                                max_wait_s=2e-5),
+        workload=Workload(requests=960, gap_s=4e-6, arrival="poisson",
+                          seed=11),
+        sla_p99_s=6e-5,
+        events=(
+            SetWorkload(1e-4, gap_s=7e-7),
+            SetWorkload(5e-4, gap_s=4e-6),
+        ),
+    )
+
+
+def _preset_spike_plus_failure() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="spike_plus_failure",
+        description=(
+            "Bursty arrivals, then a traffic spike with an MN failure "
+            "landing mid-spike: re-route rides the surviving replicas "
+            "while the SLA controller scales the pool against the "
+            "compound tail, the MN heals, and traffic recedes — the "
+            "paper's reliability story under its worst-case load "
+            "(§IV-A/§IV-D + Fig. 2b, via the typed timeline).  Same "
+            "compressed virtual timescale as flash_crowd, with an "
+            "on-scale mn_recovery_s so the mid-stage re-issue stall "
+            "stays commensurate with the traffic."),
+        topology=smoke_topology(n_cn=1, m_mn=2, inflight_depth=4,
+                                max_wait_s=2e-5, mn_recovery_s=2e-5),
+        workload=Workload(requests=1024, gap_s=2e-6, arrival="bursty",
+                          burstiness=4.0, seed=13),
+        sla_p99_s=6e-5,
+        events=(
+            SetWorkload(1e-4, gap_s=3.5e-7),
+            FailMN(1.5e-4, mn=1),
+            RecoverMN(2.5e-4, mn=1),
+            SetWorkload(4e-4, gap_s=2e-6),
+        ),
+    )
+
+
 PRESETS = {
     "failover_storm": _preset_failover_storm,
     "diurnal_elastic": _preset_diurnal_elastic,
     "skew_drift": _preset_skew_drift,
     "mixed_ddr_nmp": _preset_mixed_ddr_nmp,
     "pipeline_burst": _preset_pipeline_burst,
+    "flash_crowd": _preset_flash_crowd,
+    "spike_plus_failure": _preset_spike_plus_failure,
 }
 
 

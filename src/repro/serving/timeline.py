@@ -56,6 +56,17 @@ where contention actually happens.  A mid-stage ``FailMN`` aborts the
 struck batch's planned intervals at the failure instant — the in-
 flight prefix of each scan/gather is charged to its resource — before
 the batch re-issues on the survivors.
+
+**Traffic realism** (this layer's additions on top of the pipeline):
+per-query queueing delay (arrival -> first batch admission) is
+measured into ``ClusterStats.queue_wait_{mean,p99}``; ``DegradeMN``
+events slow an MN's bus by a factor (a batch-boundary pool-state
+event, and — like every non-Resize/SetWorkload event — a barrier for
+the mid-stage failure scan in ``_next_fail``); scans straggling past
+``ClusterConfig.hedge_multiplier x`` their nominal time are hedged
+onto replica buses (``_mn_plan``); and an optional ``SLAController``
+is fed every completion, its emitted ``Resize`` events joining the
+live queue via ``_enqueue``.
 """
 from __future__ import annotations
 
@@ -70,12 +81,12 @@ from repro.core import hardware as hw
 from repro.core.scheduler import Batch, Batcher, Query
 from repro.serving.cluster import ClusterStats
 from repro.serving.engine import Request, Result
-from repro.serving.pipeline import (AdmissionWindow, BatchTrace, MNPlan,
-                                    fit_clocks, summarize_resources)
-from repro.serving.scenario import (FailMN, RecoverMN, ReloadParams,
-                                    ReplanPlacement, Resize, ScenarioEvent,
-                                    SetWorkload, _lat_stats, sort_events,
-                                    validate_events)
+from repro.serving.pipeline import (AdmissionWindow, BatchTrace, HedgeIssue,
+                                    MNPlan, fit_clocks, summarize_resources)
+from repro.serving.scenario import (DegradeMN, FailMN, RecoverMN,
+                                    ReloadParams, ReplanPlacement, Resize,
+                                    ScenarioEvent, SetWorkload, _lat_stats,
+                                    sort_events, validate_events)
 
 
 def legacy_events(failures: Sequence[Tuple[float, int]],
@@ -111,12 +122,17 @@ class TimelineDispatcher:
     engine's virtual clock."""
 
     def __init__(self, engine, requests: Sequence[Request],
-                 events: Sequence[ScenarioEvent]):
+                 events: Sequence[ScenarioEvent], controller=None):
         self.eng = engine
         self.requests = list(requests)
         self.queue: List[ScenarioEvent] = sort_events(events)
         validate_events(self.queue, engine.m_mn)
         self.audit: List[EventRecord] = []
+        # optional SLA feedback controller
+        # (serving.autoscaler.SLAController): fed every completion,
+        # its emitted Resize events join the live queue
+        self.controller = controller
+        self.sla_actions = 0
 
     # ------------------------------------------------------ event apply
     def _record(self, ev: ScenarioEvent, applied: bool = True) -> None:
@@ -152,6 +168,7 @@ class TimelineDispatcher:
             plan = e.resize(ev.n_cn, ev.m_mn, ev.mn_type)
             self.st = e.unit_model.stage_times(e.cfg.batch_size)
             self.mn_bw = np.asarray(e.mn_bw)
+            self.mn_slow = np.asarray(e.mn_slow)
             # joining nodes are idle from the resize instant; a
             # departing node's clocks retire with their accumulated
             # stats (they stay in the registry for end-of-run
@@ -177,6 +194,13 @@ class TimelineDispatcher:
         elif isinstance(ev, ReplanPlacement):
             e.replan_placement()
             self._record(ev)
+        elif isinstance(ev, DegradeMN):
+            if ev.mn < e.m_mn:
+                changed = e.degrade_mn(ev.mn, ev.factor)
+                self.mn_slow = np.asarray(e.mn_slow)
+                self._record(ev, applied=changed)
+            else:                   # departed via an earlier shrink
+                self._record(ev, applied=False)
         else:       # SetWorkload: consumed at stream build; audit only
             self._record(ev)
 
@@ -185,6 +209,17 @@ class TimelineDispatcher:
         time order (batch-boundary semantics)."""
         while self.queue and self.queue[0].time_s <= upto:
             self._apply(self.queue.pop(0))
+
+    def _enqueue(self, ev: ScenarioEvent) -> None:
+        """Insert a dynamically emitted event (SLA controller feedback)
+        into the live queue, keeping the time sort; equal times land
+        after existing entries (stable, matching listed-order
+        semantics).  The event applies at the next batch boundary like
+        any other — emission never reaches back in time."""
+        i = len(self.queue)
+        while i > 0 and self.queue[i - 1].time_s > ev.time_s:
+            i -= 1
+        self.queue.insert(i, ev)
 
     def _next_fail(self) -> Tuple[Optional[int], Optional[FailMN]]:
         """The next failure eligible for the in-flight mid-stage path.
@@ -222,9 +257,12 @@ class TimelineDispatcher:
     def _stage_account(self, mem_j: np.ndarray,
                        gat_j: np.ndarray) -> np.ndarray:
         """Per-MN stage-seconds contributions (scan at the MN's bus
-        bandwidth + its share of the gather serialization) — the byte-
-        derived accounting the sequential engine charged per batch."""
-        return mem_j / self.mn_bw + gat_j / hw.NIC_BW
+        bandwidth, slowed by any ``DegradeMN`` factor, + its share of
+        the gather serialization) — the byte-derived accounting the
+        sequential engine charged per batch.  ``mem_j * 1.0`` is
+        float-exact, so an undegraded pool reproduces the historical
+        numbers bit-for-bit."""
+        return (mem_j * self.mn_slow) / self.mn_bw + gat_j / hw.NIC_BW
 
     def _mn_plan(self, task: int, mn_start: float, mem_j: np.ndarray,
                  gat_j: np.ndarray, cache_s: float) -> MNPlan:
@@ -240,21 +278,86 @@ class TimelineDispatcher:
         clock's exact floating-point arithmetic; it is the committed
         stage time whenever no resource queues the batch (always true
         at depth 1), which is what makes depth-1 runs bitwise-identical
-        to the pre-pipeline engine."""
+        to the pre-pipeline engine.
+
+        **Hedged re-issue** (``ClusterConfig.hedge_multiplier > 0``,
+        FlexEMR's optimistic get): a scan whose degraded duration
+        exceeds ``multiplier x`` its nominal (undegraded) duration is
+        re-issued at the detection instant — per table, on the fastest
+        live replica bus holding that table — and the batch proceeds at
+        the first finisher.  Both issues are charged to their buses.
+        Hedging is all-or-nothing per scan: if any of the straggler's
+        tables has no live alternate replica, no hedge is issued.  A
+        plan with hedges always takes the queued commit path."""
+        e = self.eng
+        mult = float(e.cfg.hedge_multiplier)
         scans: List[Tuple[int, float, float]] = []
         max_dur = 0.0
-        scan_end = mn_start
         queued = False
+        bus_tail: Dict[int, float] = {}   # overlay: planned FIFO tails
         for j in np.nonzero(mem_j > 0)[0]:
-            dur = mem_j[j] / self.mn_bw[j]
+            dur = (mem_j[j] * self.mn_slow[j]) / self.mn_bw[j]
             s = self.mn_bus[j].peek(mn_start)
             if s > mn_start:
                 queued = True
             scans.append((int(j), s, dur))
+            bus_tail[int(j)] = s + dur
             if dur > max_dur:
                 max_dur = dur
-            if s + dur > scan_end:
-                scan_end = s + dur
+        # effective per-scan completion: the original end, or the hedge
+        # end when the hedge wins
+        ends: Dict[int, float] = {j: s + dur for j, s, dur in scans}
+        hedges: List[HedgeIssue] = []
+        if mult > 0:
+            for j, s, dur in scans:
+                nom = mem_j[j] / self.mn_bw[j]   # undegraded expectation
+                if not dur > mult * nom:
+                    continue
+                detect = s + mult * nom
+                per_table = e._last_scan.get(j, [])
+                tot = sum(b for _, b in per_table)
+                if tot <= 0:
+                    continue
+                # _last_scan holds raw per-table demand; rescale so the
+                # hedge moves exactly the cache-adjusted bytes the
+                # original scan was charged for
+                scale = float(mem_j[j]) / tot
+                groups: Dict[int, float] = {}
+                ok = True
+                for tid, b in per_table:
+                    alts = [m for m in e.alloc.replicas.get(tid, ())
+                            if m != j and m not in e.dead and m < e.m_mn]
+                    if not alts:
+                        ok = False      # all-or-nothing: no partial hedge
+                        break
+                    m2 = min(alts, key=lambda m: (
+                        self.mn_slow[m] / self.mn_bw[m], m))
+                    groups[m2] = groups.get(m2, 0.0) + b * scale
+                if not ok or not groups:
+                    continue
+                issues: List[Tuple[int, float, float, float]] = []
+                hend = detect
+                for m2 in sorted(groups):
+                    b2 = groups[m2]
+                    d2 = (b2 * self.mn_slow[m2]) / self.mn_bw[m2]
+                    s2 = max(self.mn_bus[m2].peek(detect),
+                             bus_tail.get(m2, 0.0))
+                    bus_tail[m2] = s2 + d2
+                    issues.append((m2, s2, d2, b2))
+                    if s2 + d2 > hend:
+                        hend = s2 + d2
+                won = hend < s + dur
+                hedges.extend(
+                    HedgeIssue(src_mn=j, alt_mn=m2, detect_s=detect,
+                               start_s=s2, dur_s=d2, bytes_b=b2, won=won)
+                    for m2, s2, d2, b2 in issues)
+                if won:
+                    ends[j] = hend
+                queued = True           # alternate buses were planned
+        scan_end = mn_start
+        for j, s, dur in scans:
+            if ends[j] > scan_end:
+                scan_end = ends[j]
         g_dur = float(gat_j.sum() / hw.NIC_BW)
         t_gate = float(max(max_dur, cache_s) + g_dur)
         gather_ready = max(scan_end, mn_start + cache_s)
@@ -267,7 +370,8 @@ class TimelineDispatcher:
         end = (g_start + g_dur) if queued else (mn_start + t_gate)
         return MNPlan(mn_start=mn_start, scans=scans, t_gate=t_gate,
                       gather_ready=gather_ready, gather_start=g_start,
-                      gather_dur=g_dur, queued=queued, end=end)
+                      gather_dur=g_dur, queued=queued, end=end,
+                      hedges=tuple(hedges))
 
     def _mn_abort(self, task: int, plan: MNPlan, t_fail: float,
                   bid: int) -> None:
@@ -275,9 +379,18 @@ class TimelineDispatcher:
         ``t_fail``: the traffic already on the buses and the NIC was
         real, so each planned interval's in-flight prefix is charged to
         its resource before the batch re-issues.  (The byte counters
-        charge the full pass, matching the sequential engine.)"""
+        charge the full pass, matching the sequential engine.)
+
+        Hedge prefixes are charged after the originals — a hedge's
+        start never precedes its bus's planned tail, so FIFO causality
+        holds.  Aborted hedges charge bus *time* only, not bytes: the
+        full original pass's bytes (which the hedge duplicated a subset
+        of) are already charged by the re-issue path."""
         for j, s, dur in plan.scans:
             self.mn_bus[j].charge_abort(s, min(s + dur, t_fail), bid)
+        for h in plan.hedges:
+            self.mn_bus[h.alt_mn].charge_abort(
+                h.start_s, min(h.end_s, t_fail), bid)
         if plan.gather_dur > 0 and plan.gather_start < t_fail:
             self.cn_nic[task].charge_abort(
                 plan.gather_start, min(plan.end, t_fail), bid)
@@ -303,6 +416,19 @@ class TimelineDispatcher:
             mn_done = mn_start + t_mn
         for j, s, dur in plan.scans:
             self.mn_bus[j].book(mn_start, s, s + dur, bid)
+        # hedges book after the originals: each hedge's start is at or
+        # beyond its bus's planned tail, so FIFO causality holds.  The
+        # hedge's bytes and stage-seconds are charged to the alternate
+        # MN — the duplicate traffic is real, win or lose.
+        e = self.eng
+        for h in plan.hedges:
+            self.mn_bus[h.alt_mn].book(h.detect_s, h.start_s, h.end_s,
+                                       bid)
+            e.mn_access_bytes[h.alt_mn] += h.bytes_b
+            e.mn_stage_s[h.alt_mn] += h.dur_s
+        if plan.hedges:
+            e.hedges += len({h.src_mn for h in plan.hedges})
+            e.hedge_wins += len({h.src_mn for h in plan.hedges if h.won})
         gather = (plan.gather_start, plan.gather_start)
         if plan.gather_dur > 0:
             self.cn_nic[task].book(plan.gather_ready, plan.gather_start,
@@ -355,6 +481,13 @@ class TimelineDispatcher:
             self._inject(mn_start)
         st = self.st
         self.window.wait_s += mn_start - chain_ready
+        # per-query queueing delay: arrival -> first batch admission
+        # (the instant its first part starts preprocessing).  Charged
+        # once per query, at the part that admits it.
+        for q, _ in b.parts:
+            if q.qid not in self.first_admit:
+                self.first_admit[q.qid] = pre_start
+                self.queue_waits.append(pre_start - self.arrival[q.qid])
         scores, mem_j, gat_j = e._execute(task, dense, idx)
         stage_j = self._stage_account(mem_j, gat_j)
         plan = self._mn_plan(task, mn_start, mem_j, gat_j,
@@ -423,7 +556,8 @@ class TimelineDispatcher:
             scans=tuple((j, s, s + dur) for j, s, dur in plan.scans),
             gather=gather_iv, mn_done=mn_done, dense=(d_start, done),
             done=done, reissues=reissued,
-            qids=tuple(q.qid for q, _ in b.parts)))
+            qids=tuple(q.qid for q, _ in b.parts),
+            hedges=plan.hedges))
 
         o = 0
         for q, nrows in b.parts:
@@ -442,6 +576,13 @@ class TimelineDispatcher:
                 self.latencies.append(lat)
                 self.results.append(Result(
                     q.qid, np.concatenate(self.pieces[q.qid]), lat))
+                if self.controller is not None:
+                    # feed the SLA loop; emitted resizes join the live
+                    # queue and apply at the next batch boundary
+                    for act in self.controller.observe(
+                            self.part_done[q.qid], lat):
+                        self._enqueue(act)
+                        self.sla_actions += 1
 
     def _drain_due(self, upto: Optional[float]) -> None:
         """Form every batch whose flush deadline has passed."""
@@ -473,6 +614,9 @@ class TimelineDispatcher:
 
         self.st = e.unit_model.stage_times(cfg.batch_size)
         self.mn_bw = np.asarray(e.mn_bw)
+        self.mn_slow = np.asarray(e.mn_slow)
+        self.first_admit: Dict[int, float] = {}
+        self.queue_waits: List[float] = []
         self.depth = int(cfg.inflight_depth)
         self.window = AdmissionWindow(self.depth)
         self._clocks: List = []    # every clock ever created (live+retired)
@@ -502,6 +646,7 @@ class TimelineDispatcher:
 
         # nothing completed reports nan, not a fabricated 0.0
         mean_lat, p50, p95, p99 = _lat_stats(self.latencies)
+        qw_mean, _, _, qw_p99 = _lat_stats(self.queue_waits)
         live = [a for j, a in enumerate(e.mn_access_bytes)
                 if j not in e.dead]
         cs = e.cache_stats()
@@ -537,6 +682,12 @@ class TimelineDispatcher:
             throughput_qps=(len(self.results) / makespan
                             if makespan > 0 else float("nan")),
             admission_wait_s=self.window.wait_s,
+            queue_wait_mean=qw_mean,
+            queue_wait_p99=qw_p99,
+            degrades=e.degrades,
+            hedges=e.hedges,
+            hedge_wins=e.hedge_wins,
+            sla_actions=self.sla_actions,
             resource_busy_s=r_busy,
             resource_queue_s=r_queue,
             resource_util=r_util,

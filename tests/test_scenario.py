@@ -29,7 +29,7 @@ from repro.models.dlrm import DLRMModel
 from repro.serving import scenario as sc
 from repro.serving.cluster import ClusterConfig, ClusterEngine
 from repro.serving.engine import Request
-from repro.serving.scenario import (FailMN, ModelRef, RecoverMN,
+from repro.serving.scenario import (DegradeMN, FailMN, ModelRef, RecoverMN,
                                     ReloadParams, ReplanPlacement, Resize,
                                     ScenarioSpec, SetWorkload, Topology,
                                     Workload, plan_workload, preset,
@@ -54,6 +54,7 @@ ALL_EVENTS = (
     ReplanPlacement(0.05),
     SetWorkload(0.06, alpha=1.05, gap_s=0.001, mean_size=6.0,
                 sigma=0.5, max_size=32),
+    DegradeMN(0.07, mn=2, factor=4.0),
 )
 
 

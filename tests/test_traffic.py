@@ -1,0 +1,357 @@
+"""Traffic realism & SLA feedback: arrival processes, the phase-boundary
+drift fix, queueing-delay accounting, hedged re-issue, and the
+SLAController loop.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import rm1
+from repro.data.queries import (ARRIVALS, BURST_EPISODE_MEAN,
+                                ArrivalProcess, load_trace)
+from repro.serving.autoscaler import SLAController, SLAControllerConfig
+from repro.serving.scenario import (DegradeMN, ScenarioSpec, SetWorkload,
+                                    Workload, nearest_rank, plan_workload,
+                                    preset, run_scenario, smoke_topology,
+                                    validate_events)
+
+from tests._hypothesis_compat import given, settings, st
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-traffic",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+
+
+def _proc(kind, gap_s=0.001, seed=0, **kw):
+    if kind == "trace":
+        kw.setdefault("trace", [0.0, 0.0005, 0.002, 0.0021])
+    return ArrivalProcess(kind, gap_s, seed=seed, **kw)
+
+
+# ------------------------------------------------- process unit behavior
+def test_linear_reproduces_grid_exactly():
+    p = _proc("linear", gap_s=0.004)
+    assert [p.next() for _ in range(4)] == [
+        0.0 + 0.004 * i for i in range(4)]
+
+
+def test_poisson_pinned_golden():
+    p = _proc("poisson", gap_s=0.001, seed=3)
+    got = [p.next() for _ in range(4)]
+    assert got == [7.570625938602191e-06, 0.0006666285307648349,
+                   0.0006719952769095463, 0.0012514770597200418]
+
+
+def test_bursty_pinned_golden():
+    p = _proc("bursty", gap_s=0.001, seed=3, burstiness=4.0)
+    got = [p.next() for _ in range(4)]
+    assert got == [0.002636231619304931, 0.0026576986038837763,
+                   0.0032461709175041296, 0.0035581901491522562]
+
+
+def test_trace_replays_then_extends_linearly():
+    p = _proc("trace", gap_s=0.001)
+    assert [p.next() for _ in range(6)] == [
+        0.0, 0.0005, 0.002, 0.0021, 0.0021 + 0.001, 0.0021 + 0.002]
+
+
+def test_trace_realign_rewinds_discarded_candidate():
+    # the planner's discard-and-regenerate protocol must not drop a
+    # trace arrival: realign rewinds the cursor one step
+    p = _proc("trace", gap_s=0.001)
+    assert p.next() == 0.0
+    assert p.next() == 0.0005       # candidate discarded by the caller
+    p.realign(0.0004, 0.002)
+    assert p.next() == 0.0005       # re-delivered, not dropped
+    assert p.next() == 0.002
+
+
+def test_arrival_process_validation():
+    with pytest.raises(ValueError):
+        ArrivalProcess("uniform", 0.001)
+    with pytest.raises(ValueError):
+        ArrivalProcess("trace", 0.001)          # no trace supplied
+    with pytest.raises(ValueError):
+        ArrivalProcess("bursty", 0.001, burstiness=0.5)
+
+
+def test_load_trace_validation(tmp_path):
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps({"arrivals": [0.002, 0.0, 0.001]}))
+    assert load_trace(str(path)) == [0.0, 0.001, 0.002]   # sorted
+    path.write_text(json.dumps(["a", 1.0]))
+    with pytest.raises(ValueError):
+        load_trace(str(path))
+    path.write_text(json.dumps([-1.0, 1.0]))
+    with pytest.raises(ValueError):
+        load_trace(str(path))
+
+
+@pytest.mark.parametrize("kind", ARRIVALS)
+def test_arrivals_non_decreasing_and_seed_deterministic(kind):
+    a = _proc(kind, seed=11)
+    b = _proc(kind, seed=11)
+    xs = [a.next() for _ in range(64)]
+    assert xs == [b.next() for _ in range(64)]
+    assert all(x <= y for x, y in zip(xs, xs[1:]))
+    if kind in ("poisson", "bursty"):
+        c = _proc(kind, seed=12)
+        assert xs != [c.next() for _ in range(64)]
+
+
+@pytest.mark.parametrize("kind", ("linear", "poisson", "bursty"))
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 20),
+       gaps=st.lists(st.floats(1e-6, 1e-2), min_size=2, max_size=4),
+       t_step=st.floats(1e-5, 1e-2))
+def test_realign_property(kind, seed, gaps, t_step):
+    """After realign(t_start, gap), every arrival of the new phase is
+    >= t_start, the stream stays non-decreasing, and the whole
+    trajectory is seed-deterministic."""
+    def gen():
+        p = _proc(kind, gap_s=gaps[0], seed=seed)
+        out = [p.next() for _ in range(8)]
+        t = max(out)
+        for g in gaps[1:]:
+            t = t + t_step
+            p.realign(t, g)
+            phase = [p.next() for _ in range(8)]
+            assert all(x >= t for x in phase)
+            out.extend(phase)
+        return out
+    xs = gen()
+    assert xs == gen()
+    for lo, hi in zip(xs, xs[1:]):
+        assert lo <= hi
+
+
+# ------------------------------------------- the phase-boundary drift fix
+def test_two_phase_realign_golden():
+    """The historical bug: a SetWorkload off the arrival grid re-based
+    the stream on the stale-gap extrapolation instead of the declared
+    phase start.  Pinned: the first post-event arrival lands exactly ON
+    the event time and the new gap applies from there."""
+    spec = ScenarioSpec(
+        name="t", topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=6, mean_size=4.0, max_size=12,
+                          gap_s=0.004, seed=0),
+        events=(SetWorkload(0.007, gap_s=0.001),))
+    reqs, phases = plan_workload(spec, CFG)
+    assert [r.arrival for r in reqs] == [
+        0.0 + 0.004 * 0, 0.0 + 0.004 * 1,
+        0.007 + 0.001 * 0, 0.007 + 0.001 * 1,
+        0.007 + 0.001 * 2, 0.007 + 0.001 * 3]
+    assert [(p.index, p.t_start, p.rid_start, p.rid_end)
+            for p in phases] == [(0, 0.0, 0, 2), (1, 0.007, 2, 6)]
+
+
+@pytest.mark.parametrize("kind", ARRIVALS)
+def test_phase_arrivals_respect_phase_start(kind, tmp_path):
+    extra = {}
+    if kind == "trace":
+        path = tmp_path / "trace.json"
+        path.write_text(json.dumps(
+            [i * 0.0008 for i in range(24)]))
+        extra["trace_path"] = str(path)
+    spec = ScenarioSpec(
+        name="t", topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=24, mean_size=4.0, max_size=12,
+                          gap_s=0.001, seed=9, arrival=kind, **extra),
+        events=(SetWorkload(0.005, gap_s=0.0005),
+                SetWorkload(0.011, gap_s=0.002)))
+    reqs, phases = plan_workload(spec, CFG)
+    arrivals = [r.arrival for r in reqs]
+    assert arrivals == sorted(arrivals)
+    assert sum(p.requests for p in phases) == 24
+    for p in phases:
+        chunk = arrivals[p.rid_start:p.rid_end]
+        if kind != "trace":     # a trace is absolute: phases only
+            assert all(t >= p.t_start for t in chunk)   # re-shape payloads
+
+
+def test_linear_multiphase_arrivals_unchanged_single_phase():
+    """arrival='linear' with no events is bitwise the historical
+    stream: 0.0 + gap * i."""
+    spec = ScenarioSpec(
+        name="t", topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=8, mean_size=4.0, max_size=12,
+                          gap_s=0.004, seed=0))
+    reqs, _ = plan_workload(spec, CFG)
+    assert [r.arrival for r in reqs] == [0.0 + 0.004 * i
+                                         for i in range(8)]
+
+
+def test_stochastic_arrivals_leave_payloads_untouched():
+    """Switching the arrival process moves timestamps only — the
+    size/payload RNG stream must not shift."""
+    def payloads(kind):
+        spec = ScenarioSpec(
+            name="t", topology=smoke_topology(batch_size=8),
+            workload=Workload(requests=8, mean_size=4.0, max_size=12,
+                              gap_s=0.004, seed=3, arrival=kind))
+        return plan_workload(spec, CFG)[0]
+    lin, poi = payloads("linear"), payloads("poisson")
+    for a, b in zip(lin, poi):
+        assert a.size == b.size
+        assert np.array_equal(a.payload["indices"], b.payload["indices"])
+        assert np.array_equal(a.payload["dense"], b.payload["dense"])
+        assert a.arrival != b.arrival or a.arrival == 0.0
+
+
+# -------------------------------------------------- percentile convention
+def test_nearest_rank_units():
+    assert np.isnan(nearest_rank([], 99))
+    assert nearest_rank([7.0], 50) == 7.0
+    assert nearest_rank([4.0, 1.0, 3.0, 2.0], 50) == 2.0
+    assert nearest_rank(list(range(1, 21)), 95) == 19
+    assert nearest_rank(list(range(1, 33)), 99) == 32   # an actual sample
+
+
+# --------------------------------------------------- queueing accounting
+def test_unloaded_run_has_exactly_zero_queue_wait():
+    """Batch-filling queries at generous gaps: every batch forms on
+    arrival with an idle CPU, so arrival->admission delay is exactly
+    0.0 (not merely small) — and validate_latency_model's unloaded
+    queue-wait term is pinned to 0.0."""
+    spec = ScenarioSpec(
+        name="t", topology=smoke_topology(),
+        workload=Workload(requests=6, mean_size=64.0, sigma=0.25,
+                          max_size=32, gap_s=0.002, seed=5))
+    rep = run_scenario(spec)
+    assert rep.stats.queue_wait_mean == 0.0
+    assert rep.stats.queue_wait_p99 == 0.0
+    assert rep.latency_model["queue_wait_s"] == 0.0
+
+
+def test_overload_charges_queue_wait_into_latency():
+    spec = ScenarioSpec(
+        name="t",
+        topology=smoke_topology(inflight_depth=4, max_wait_s=2e-5),
+        workload=Workload(requests=128, gap_s=1e-7, seed=5))
+    st_ = run_scenario(spec).stats
+    assert st_.queue_wait_p99 > 0.0
+    assert st_.p99 >= st_.queue_wait_p99      # waits are inside latency
+
+
+# ------------------------------------------------ DegradeMN + hedged scans
+def test_degrade_mn_validation():
+    with pytest.raises(ValueError):
+        validate_events((DegradeMN(0.01, mn=0, factor=0.5),), 4)
+    with pytest.raises(ValueError):
+        validate_events((DegradeMN(0.01, mn=0, factor="x"),), 4)
+    with pytest.raises(ValueError):
+        validate_events((DegradeMN(0.01, mn=9, factor=2.0),), 4)
+    validate_events((DegradeMN(0.01, mn=3, factor=1.0),), 4)
+
+
+def test_degrade_without_hedging_slows_tail_only():
+    base = ScenarioSpec(
+        name="t", topology=smoke_topology(inflight_depth=4,
+                                          max_wait_s=2e-5),
+        workload=Workload(requests=128, gap_s=1e-6, seed=7))
+    clean = run_scenario(base)
+    deg = run_scenario(dataclasses.replace(
+        base, events=(DegradeMN(5e-5, mn=1, factor=8.0),)))
+    assert deg.stats.degrades == 1
+    assert deg.stats.p99 > clean.stats.p99
+    assert deg.bitwise_equal(clean)     # degradation moves time, not values
+
+
+def test_hedging_cuts_p99_and_preserves_scores():
+    base = ScenarioSpec(
+        name="t", topology=smoke_topology(inflight_depth=4,
+                                          max_wait_s=2e-5),
+        workload=Workload(requests=128, gap_s=1e-6, seed=7),
+        events=(DegradeMN(5e-5, mn=1, factor=8.0),))
+    off = run_scenario(base)
+    on = run_scenario(dataclasses.replace(
+        base, topology=dataclasses.replace(base.topology,
+                                           hedge_multiplier=2.0)))
+    assert on.stats.hedges > 0
+    assert on.stats.hedge_wins > 0
+    assert on.stats.p99 < off.stats.p99
+    assert on.bitwise_equal(off)
+    # hedge traffic is real: the replica buses were charged for it
+    assert sum(on.stats.mn_access_bytes) > sum(off.stats.mn_access_bytes)
+
+
+def test_hedging_disabled_is_bitwise_noop():
+    """hedge_multiplier=0.0 (the default) must leave an undegraded run
+    bitwise-identical in every stat — parity by construction."""
+    base = ScenarioSpec(
+        name="t", topology=smoke_topology(inflight_depth=4),
+        workload=Workload(requests=24, mean_size=4.0, max_size=12,
+                          gap_s=0.001, seed=3))
+    a, b = run_scenario(base), run_scenario(base)
+    assert a.bitwise_equal(b)
+    assert a.stats.p99 == b.stats.p99
+    assert a.stats.hedges == 0 and a.stats.degrades == 0
+
+
+# ------------------------------------------------------ SLA feedback loop
+def test_sla_controller_unit_convergence():
+    cfg = SLAControllerConfig(sla_p99_s=0.010, window=4, cooldown=2,
+                              step=1, max_scale=3)
+    c = SLAController(cfg, n_cn=1, m_mn=2)
+    # breach: scale up once the window fills and cooldown passes
+    acts = []
+    for i in range(8):
+        acts += c.observe(0.001 * i, 0.050)
+    assert acts and acts[0].n_cn == 2 and acts[0].m_mn == 3
+    # keep breaching: climbs to the ceiling and stops there
+    for i in range(40):
+        acts += c.observe(0.008 + 0.001 * i, 0.050)
+    assert (c.n_cn, c.m_mn) == (3, 6)       # max_scale x initial
+    # recover: drop below band_low x sla -> scales back to the floor
+    for i in range(60):
+        acts += c.observe(0.050 + 0.001 * i, 0.001)
+    assert (c.n_cn, c.m_mn) == (1, 2)
+    times = [a.time_s for a in acts]
+    assert times == sorted(times)           # audit trail stays ordered
+    assert all(a.time_s >= 0 for a in acts)
+
+
+def test_sla_controller_config_validation():
+    with pytest.raises(ValueError):
+        SLAControllerConfig(sla_p99_s=0.0) and SLAController(
+            SLAControllerConfig(sla_p99_s=0.0), 1, 1)
+    with pytest.raises(ValueError):
+        SLAController(SLAControllerConfig(sla_p99_s=0.01, window=0), 1, 1)
+    with pytest.raises(ValueError):
+        SLAController(SLAControllerConfig(sla_p99_s=0.01, band_low=1.0),
+                      1, 1)
+    with pytest.raises(ValueError):
+        SLAController(SLAControllerConfig(sla_p99_s=0.01, max_scale=0),
+                      1, 1)
+
+
+def test_flash_crowd_preset_controller_full_arc():
+    """The flash_crowd preset end-to-end: the controller scales the
+    pool up against the crowd and returns it to the floor once traffic
+    recedes."""
+    spec = preset("flash_crowd")
+    rep = run_scenario(spec)
+    st_ = rep.stats
+    assert st_.sla_actions > 0
+    assert st_.resizes == st_.sla_actions   # every resize was feedback
+    peak_cn = max(r.n_cn for r in st_.events)
+    assert peak_cn > spec.topology.n_cn     # it scaled up...
+    assert (rep.final_n_cn, rep.final_m_mn) == (
+        spec.topology.n_cn, spec.topology.m_mn)     # ...and back down
+    assert rep.completed == spec.workload.requests
+
+
+def test_sla_p99_s_serialization_roundtrip():
+    spec = preset("flash_crowd")
+    again = ScenarioSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.sla_p99_s == spec.sla_p99_s
+    # absent when unset: old scenario files stay loadable byte-for-byte
+    plain = preset("failover_storm")
+    assert plain.sla_p99_s is None
+    assert "sla_p99_s" not in plain.to_dict()
