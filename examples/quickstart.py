@@ -15,7 +15,8 @@ import numpy as np
 from repro import configs
 from repro.core import allocator, embedding_manager as em, tco
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
-from repro.data.queries import QueryDist, ShardedLoader, dlrm_batch
+from repro.data.queries import (QueryDist, ShardedLoader, dlrm_batch,
+                                dlrm_request_stream)
 from repro.models import registry
 from repro.serving.engine import DLRMServingEngine, Request
 from repro.train.optimizer import OptConfig
@@ -48,11 +49,13 @@ def main():
     # --- serve with sequential query processing
     params = model.init(0)
     engine = DLRMServingEngine(model, params, batch_size=64)
-    sizes = QueryDist(mean_size=12, max_size=128).sample(rng, 16)
-    reqs = [Request(i, {k: v for k, v in
-                        dlrm_batch(cfg, int(s), rng).items()
-                        if k != "labels"}, int(s), 0.0)
-            for i, s in enumerate(sizes)]
+    # the one sanctioned way to build an engine workload: a seeded
+    # stream from dlrm_request_stream (gap_s=0 -> all arrive at t=0,
+    # matching the historical hand-rolled batch)
+    reqs = [Request(*r) for r in
+            dlrm_request_stream(cfg, 16, seed=0, gap_s=0.0,
+                                dist=QueryDist(mean_size=12,
+                                               max_size=128))]
     results = engine.serve(reqs)
     print(f"[serve] {len(results)} queries, "
           f"{sum(r.outputs.size for r in results)} samples scored")

@@ -1,0 +1,32 @@
+"""``repro.analysis`` — determinism & clock-discipline tooling (disagglint).
+
+Every correctness claim this repo makes — bitwise parity to a baseline,
+seeded-only RNG, a serde-complete event registry, FIFO/conservation
+discipline in the per-resource virtual clocks — is an *invariant by
+convention*.  This package makes them machine-checked:
+
+- **Static half** (``engine`` + ``rules_*``): an AST-based rule engine
+  with repo-specific rules — wall-clock bans, seeded-RNG discipline,
+  set-iteration ordering hazards, frozen-spec hygiene, the
+  ``ScenarioEvent`` registry/dispatcher cross-module sync, ``ClusterStats``
+  serialization/docs drift, argparse <-> spec-field sync, Pallas kernel
+  hygiene, and exact float comparison on ``*_s`` time values.  Run it
+  with ``python -m repro.analysis [paths] [--format json]``; suppress a
+  finding with ``# disagglint: disable=<rule> -- <reason>`` (the reason
+  is mandatory).
+
+- **Runtime half** (``clocksan``): an opt-in clock sanitizer — the
+  race-detector analogue for the depth-d pipelined virtual clock.  With
+  ``REPRO_CLOCKSAN=1``, every ``ResourceClock`` booking is checked for
+  causality/overlap/double-commit at commit time and the whole run is
+  verified post-hoc for FIFO order, busy-time conservation (aborted
+  prefixes included), and audit-trail completeness (every fired event
+  lands in ``ClusterStats.events``).
+
+The package imports only the standard library at module scope, so the
+lint CLI starts without pulling JAX.
+"""
+from repro.analysis.engine import (LintResult, lint_paths,  # noqa: F401
+                                   load_rules, main)
+from repro.analysis.report import (Finding, render_json,  # noqa: F401
+                                   render_text)

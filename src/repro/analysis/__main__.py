@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — the disagglint CLI entry point."""
+import sys
+
+from repro.analysis.engine import main
+
+if __name__ == "__main__":
+    sys.exit(main())

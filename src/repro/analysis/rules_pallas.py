@@ -1,0 +1,120 @@
+"""Pallas kernel hygiene.
+
+The embedding-bag kernels are written to one discipline: control flow
+stays on-device (``pl.when``/``lax`` primitives, never Python ``if`` on
+a value loaded from a Ref), block shapes are static, and every
+``pallas_call`` site plumbs ``interpret=`` so the CPU CI path exists.
+This rule checks all three, content-gated on modules that actually
+import pallas:
+
+- ``pallas_call(...)`` without an ``interpret=`` keyword;
+- Python ``if``/``while`` inside a kernel whose test reads a kernel
+  parameter (a Ref) via subscript or ``pl.load`` — data-dependent
+  Python branching traces only one side;
+- ``BlockSpec`` shape tuples containing non-static elements (calls,
+  subscripts) — block shapes must be compile-time constants.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis.engine import Module, Project, register
+from repro.analysis.report import Finding
+
+STATIC_SHAPE_NODES = (ast.Constant, ast.Name, ast.Attribute, ast.BinOp,
+                      ast.UnaryOp)
+
+
+def _imports_pallas(mod: Module) -> bool:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            if any("pallas" in a.name for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and "pallas" in node.module:
+                return True
+            if any("pallas" in a.name for a in node.names):
+                return True
+    return False
+
+
+def _pallas_call_sites(mod: Module) -> List[ast.Call]:
+    return [node for node in ast.walk(mod.tree)
+            if isinstance(node, ast.Call)
+            and ((isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "pallas_call")
+                 or (isinstance(node.func, ast.Name)
+                     and node.func.id == "pallas_call"))]
+
+
+def _kernel_names(calls: List[ast.Call]) -> Set[str]:
+    names = set()
+    for c in calls:
+        if c.args and isinstance(c.args[0], ast.Name):
+            names.add(c.args[0].id)
+    return names
+
+
+def _reads_param(test: ast.AST, params: Set[str]) -> bool:
+    """Does this branch test read a kernel parameter (Ref) — via
+    ``ref[...]`` subscript or ``pl.load(ref, ...)``?"""
+    for node in ast.walk(test):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in params):
+            return True
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "load"
+                and node.args and isinstance(node.args[0], ast.Name)
+                and node.args[0].id in params):
+            return True
+    return False
+
+
+@register("pallas-hygiene",
+          "pallas_call plumbs interpret=, no Python branching on Ref "
+          "loads, static BlockSpec shapes")
+def check_pallas(project: Project) -> Iterable[Finding]:
+    for mod in project.modules:
+        if not _imports_pallas(mod):
+            continue
+        calls = _pallas_call_sites(mod)
+        for c in calls:
+            if not any(kw.arg == "interpret" for kw in c.keywords):
+                yield Finding(
+                    mod.rel, c.lineno, "pallas-hygiene",
+                    "pallas_call without interpret= — the CPU CI path "
+                    "needs interpret mode plumbed through")
+        kernel_names = _kernel_names(calls)
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.FunctionDef)
+                    and node.name in kernel_names):
+                params = {a.arg for a in node.args.args}
+                for sub in ast.walk(node):
+                    if (isinstance(sub, (ast.If, ast.While))
+                            and _reads_param(sub.test, params)):
+                        yield Finding(
+                            mod.rel, sub.lineno, "pallas-hygiene",
+                            "data-dependent Python branch on a Ref load "
+                            "inside a kernel — trace-time control flow "
+                            "sees one side only; use pl.when/lax.cond")
+            if (isinstance(node, ast.Call)
+                    and ((isinstance(node.func, ast.Name)
+                          and node.func.id == "BlockSpec")
+                         or (isinstance(node.func, ast.Attribute)
+                             and node.func.attr == "BlockSpec"))):
+                shapes = [a for a in node.args
+                          if isinstance(a, ast.Tuple)]
+                shapes += [kw.value for kw in node.keywords
+                           if kw.arg == "block_shape"
+                           and isinstance(kw.value, ast.Tuple)]
+                for tup in shapes:
+                    for el in tup.elts:
+                        if not isinstance(el, STATIC_SHAPE_NODES):
+                            yield Finding(
+                                mod.rel, el.lineno, "pallas-hygiene",
+                                "non-static BlockSpec shape element — "
+                                "block shapes must be compile-time "
+                                "constants")

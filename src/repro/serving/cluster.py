@@ -84,7 +84,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import (TYPE_CHECKING, Dict, List, Optional, Sequence, Set,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +98,9 @@ from repro.core.hardware import NODE_TYPES
 from repro.core.serving_unit import ServingUnitModel, UnitSpec
 from repro.serving.cache import CacheStats, RowCache
 from repro.serving.engine import Request, Result
+
+if TYPE_CHECKING:   # timeline imports cluster; annotation-only reverse dep
+    from repro.serving.timeline import EventRecord
 
 
 def _fit(arr: np.ndarray, n: int, fill: float = 0.0) -> np.ndarray:
@@ -227,7 +231,7 @@ class ClusterStats:
     # fire order — event, fire time, resulting pool shape.  Recoveries,
     # resizes, reloads, and replans all appear here with real virtual-
     # clock timestamps instead of being untimed method calls.
-    events: List = field(default_factory=list)
+    events: List["EventRecord"] = field(default_factory=list)
 
 
 class ClusterEngine:

@@ -47,6 +47,8 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis import clocksan
+
 
 @dataclass(frozen=True)
 class Interval:
@@ -87,6 +89,11 @@ class ResourceClock:
              tag: int = -1, aborted: bool = False) -> None:
         """Commit a planned busy interval.  ``ready_s`` is when the
         work *could* have started (start - ready is queueing delay)."""
+        if clocksan.enabled():
+            # pure observer, checked before any mutation: enabling the
+            # sanitizer cannot perturb the simulated timeline
+            clocksan.check_book(self, ready_s, start_s, end_s, tag,
+                                aborted)
         if start_s < self.free_at or start_s < ready_s or end_s < start_s:
             raise AssertionError(
                 f"{self.name}: booking [{start_s}, {end_s}) violates "
@@ -243,16 +250,24 @@ def summarize_resources(clocks: List[ResourceClock], makespan_s: float
     utilization (busy / makespan), and occupancy ((busy + queued) /
     makespan).  A re-grown node's clock shares its predecessor's name
     and their stats sum — the name identifies the slot, not the
-    incarnation."""
+    incarnation.
+
+    The returned dicts are key-sorted: accumulation runs in clock
+    creation order (so the floating-point sums are reproducible against
+    the per-clock fold), but the emitted mappings iterate in sorted-key
+    order so serialized reports are byte-stable run to run."""
     busy: Dict[str, float] = {}
     queue: Dict[str, float] = {}
     for c in clocks:
         busy[c.name] = float(busy.get(c.name, 0.0) + c.busy_s)
         queue[c.name] = float(queue.get(c.name, 0.0) + c.queue_s)
+    names = sorted(busy)
+    busy = {k: busy[k] for k in names}
+    queue = {k: queue[k] for k in names}
     if makespan_s > 0:
-        util = {k: v / makespan_s for k, v in busy.items()}
-        occ = {k: (busy[k] + queue[k]) / makespan_s for k in busy}
+        util = {k: busy[k] / makespan_s for k in names}
+        occ = {k: (busy[k] + queue[k]) / makespan_s for k in names}
     else:
-        util = {k: 0.0 for k in busy}
-        occ = {k: 0.0 for k in busy}
+        util = {k: 0.0 for k in names}
+        occ = {k: 0.0 for k in names}
     return busy, queue, util, occ

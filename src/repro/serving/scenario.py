@@ -1016,6 +1016,11 @@ def main(argv=None) -> int:
                    help="execute each linted scenario via run_scenario")
     p.add_argument("--write-presets", metavar="DIR", default=None,
                    help="re-emit the named preset library into DIR")
+    p.add_argument("--format", choices=["text", "json"], default="text",
+                   help="lint report format: text (default; defects "
+                        "raise, preserving the historical CLI contract) "
+                        "or json (defects become findings in the shared "
+                        "repro.analysis report schema; exit 1 if any)")
     args = p.parse_args(argv)
     if args.write_presets:
         import os
@@ -1027,6 +1032,29 @@ def main(argv=None) -> int:
         return 0
     if not args.paths:
         p.error("no scenario files given")
+    if args.format == "json":
+        # one lint-report schema across the repo: the scenario lint
+        # emits repro.analysis findings, so CI parses a single shape
+        # regardless of which linter produced it
+        if args.run:
+            p.error("--format json is lint-only (drop --run)")
+        from repro.analysis.report import Finding, LintResult, render_json
+        result = LintResult()
+        for path in args.paths:
+            result.files_checked += 1
+            try:
+                spec = ScenarioSpec.load(path)
+                spec.validate()
+                rt = ScenarioSpec.from_json(spec.to_json())
+                if rt != spec:
+                    raise AssertionError(
+                        "serde round-trip changed the spec")
+            except Exception as e:
+                result.findings.append(Finding(
+                    file=path, line=0, rule="scenario-lint",
+                    message=f"{type(e).__name__}: {e}"))
+        sys.stdout.write(render_json(result, tool="scenario-lint"))
+        return result.exit_code()
     models = {}     # (arch, reduced, init_seed) -> (model, params):
     for path in args.paths:  # presets share one reduced rm1 — build once
         spec = ScenarioSpec.load(path)

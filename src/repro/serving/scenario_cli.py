@@ -10,7 +10,12 @@ module exists only in ``sys.modules`` as itself, so the scenario module
 loads exactly once, under its canonical name.
 
   PYTHONPATH=src python -m repro.serving.scenario_cli \
-      examples/scenarios/*.json [--run] [--write-presets DIR]
+      examples/scenarios/*.json [--run] [--write-presets DIR] \
+      [--format text|json]
+
+``--format json`` renders the lint outcome in the shared
+``repro.analysis.report`` schema (byte-stable, machine-diffable) and
+exits nonzero on findings instead of raising.
 """
 import sys
 

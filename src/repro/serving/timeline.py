@@ -76,6 +76,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis import clocksan
 from repro.core import embedding_manager as em
 from repro.core import hardware as hw
 from repro.core.scheduler import Batch, Batcher, Query
@@ -133,6 +134,11 @@ class TimelineDispatcher:
         # its emitted Resize events join the live queue
         self.controller = controller
         self.sla_actions = 0
+        # audit-completeness accounting (checked by clocksan when
+        # REPRO_CLOCKSAN=1): every event ever on the queue — initial
+        # timeline plus dynamically enqueued — must land in the audit
+        self._n_events0 = len(self.queue)
+        self._n_enqueued = 0
 
     # ------------------------------------------------------ event apply
     def _record(self, ev: ScenarioEvent, applied: bool = True) -> None:
@@ -220,6 +226,7 @@ class TimelineDispatcher:
         while i > 0 and self.queue[i - 1].time_s > ev.time_s:
             i -= 1
         self.queue.insert(i, ev)
+        self._n_enqueued += 1
 
     def _next_fail(self) -> Tuple[Optional[int], Optional[FailMN]]:
         """The next failure eligible for the in-flight mid-stage path.
@@ -694,6 +701,14 @@ class TimelineDispatcher:
             resource_occupancy=r_occ,
             events=list(self.audit),
         )
+        if clocksan.enabled():
+            # post-hoc sanitize: FIFO/overlap over every clock ever
+            # created (live + retired), busy-time conservation against
+            # the committed intervals, the per-resource folds on stats,
+            # and audit completeness (every fired event recorded)
+            clocksan.verify_run(
+                self._clocks, stats, audit=stats.events,
+                n_audit_expected=self._n_events0 + self._n_enqueued)
         e.last_trace = self.trace
         e.last_resources = list(self._clocks)
         self.results.sort(key=lambda r: r.rid)

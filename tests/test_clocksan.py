@@ -1,0 +1,216 @@
+"""Runtime clock-sanitizer battery (``repro.analysis.clocksan``).
+
+Positive half: with ``REPRO_CLOCKSAN=1`` the full pipeline serves at
+every inflight depth 1-8 with zero sanitizer findings — including under
+mid-stage failure aborts — and enabling the sanitizer changes *nothing*
+(depth-1 runs are bitwise-identical with it on and off: the sanitizer
+is a pure observer).
+
+Negative half: each invariant class — causality, time-travel,
+FIFO/overlap, double-commit, out-of-band mutation, busy-time
+conservation, stats folds, audit completeness — is violated on purpose
+and must raise :class:`ClockSanError` naming the violation.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis import clocksan
+from repro.analysis.clocksan import ClockSanError
+from repro.configs import rm1
+from repro.data.queries import QueryDist, dlrm_batch
+from repro.models.dlrm import DLRMModel
+from repro.serving.cluster import ClusterConfig, ClusterEngine
+from repro.serving.engine import Request
+from repro.serving.pipeline import Interval, ResourceClock
+from repro.serving.scenario import FailMN, RecoverMN, Resize
+
+CFG = rm1.CONFIG.replace(
+    name="rm1-clocksan",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+MODEL = DLRMModel(CFG)
+PARAMS = MODEL.init(0)
+
+
+def _requests(n, seed, gap_s=0.0):
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=4.0, max_size=12).sample(rng, n)
+    reqs = []
+    for i, s in enumerate(sizes):
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), gap_s * i))
+    return reqs
+
+
+def _serve(depth, n=24, seed=7, gap_s=0.0, events=(), **kw):
+    kw.setdefault("mn_types", ["ddr_mn"] * 4)
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2,
+        inflight_depth=depth, **kw))
+    res, stats = eng.serve(_requests(n, seed, gap_s), events=list(events))
+    return eng, res, stats
+
+
+@pytest.fixture
+def sane(monkeypatch):
+    monkeypatch.setenv("REPRO_CLOCKSAN", "1")
+    clocksan.reset()
+    yield
+    clocksan.reset()
+
+
+# ------------------------------------------------------------- the gate
+def test_enabled_gate(monkeypatch):
+    monkeypatch.delenv("REPRO_CLOCKSAN", raising=False)
+    assert not clocksan.enabled()
+    monkeypatch.setenv("REPRO_CLOCKSAN", "0")
+    assert not clocksan.enabled()
+    monkeypatch.setenv("REPRO_CLOCKSAN", "1")
+    assert clocksan.enabled()
+
+
+# ------------------------------------------------- end-to-end positives
+@pytest.mark.parametrize("depth", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_depth_sweep_zero_findings(sane, depth):
+    """Acceptance: the pipeline serves at every depth 1-8 under the
+    sanitizer with zero findings (a finding raises out of serve)."""
+    _, res, stats = _serve(depth)
+    assert stats.completed == len(res) > 0
+    assert stats.inflight_depth == depth
+
+
+def test_events_and_midstage_abort_zero_findings(sane):
+    """The abort path (charged in-flight prefixes) and the boundary
+    event path both sanitize clean."""
+    eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+        n_cn=2, m_mn=4, batch_size=8, n_replicas=2, inflight_depth=3,
+        mn_types=["ddr_mn"] * 4))
+    eng.mn_bw = [1.0] * eng.m_mn      # seconds-long scans: failure lands
+    res, stats = eng.serve(_requests(16, 3),
+                           events=[FailMN(0.5, mn=0)])
+    assert stats.reissues >= 1
+    assert any(iv.aborted for c in eng.last_resources
+               for iv in c.intervals)
+    _serve(3, gap_s=0.0004,
+           events=(FailMN(0.001, mn=1), RecoverMN(0.004, mn=1),
+                   Resize(0.006, n_cn=3, m_mn=5)))
+
+
+def test_sanitizer_is_a_pure_observer(monkeypatch):
+    """Enabling clocksan must not perturb the run: depth-1 scores,
+    latencies, and every stat are bitwise-identical with it on and off
+    (this is what keeps the depth-1 parity claims valid under CI's
+    sanitized job)."""
+    monkeypatch.delenv("REPRO_CLOCKSAN", raising=False)
+    _, res_off, st_off = _serve(1, gap_s=0.0004)
+    monkeypatch.setenv("REPRO_CLOCKSAN", "1")
+    clocksan.reset()
+    _, res_on, st_on = _serve(1, gap_s=0.0004)
+    assert len(res_off) == len(res_on)
+    for a, b in zip(res_off, res_on):
+        assert a.rid == b.rid and a.latency == b.latency
+        assert np.array_equal(a.outputs, b.outputs)
+    assert dataclasses.asdict(st_off) == dataclasses.asdict(st_on)
+
+
+# --------------------------------------------------- booking negatives
+def test_causality_violation_raises(sane):
+    c = ResourceClock("r")
+    c.book(0.0, 0.0, 2.0)
+    with pytest.raises(ClockSanError, match="FIFO"):
+        c.book(0.0, 1.0, 3.0)         # starts before free_at
+    with pytest.raises(ClockSanError, match="causality"):
+        c.book(5.0, 4.0, 6.0)         # starts before ready
+
+
+def test_time_travel_raises(sane):
+    c = ResourceClock("r")
+    with pytest.raises(ClockSanError, match="time-travel"):
+        c.book(0.0, 1.0, 0.5)
+
+
+def test_out_of_band_mutation_and_double_commit(sane):
+    """A desynced clock (free_at rewound behind the sanitizer's back)
+    cannot sneak a booking through: the shadow, the interval list, and
+    the duplicate set all catch it."""
+    c = ResourceClock("r")
+    c.book(0.0, 0.0, 2.0, tag=7)
+    c.free_at = 0.0                   # out-of-band rewind
+    with pytest.raises(ClockSanError) as ei:
+        c.book(0.0, 0.0, 2.0, tag=7)  # identical re-commit
+    msg = str(ei.value)
+    assert "double-commit" in msg
+    assert "overlap" in msg
+    assert "out-of-band" in msg
+
+
+# -------------------------------------------------- verify_run negatives
+def _committed_clock(name="r"):
+    c = ResourceClock(name)
+    c.book(0.0, 0.0, 2.0, tag=1)
+    c.book(1.0, 2.0, 3.5, tag=2)
+    return c
+
+
+def test_verify_run_clean_clock_passes(sane):
+    clocksan.verify_run([_committed_clock()])
+
+
+def test_conservation_violation_raises(sane):
+    c = _committed_clock()
+    c.busy_s += 0.25                  # busy time no longer == intervals
+    with pytest.raises(ClockSanError, match="not conserved"):
+        clocksan.verify_run([c])
+
+
+def test_interval_overlap_detected_post_hoc(sane):
+    c = ResourceClock("r")
+    c.intervals.append(Interval(0.0, 2.0))
+    c.intervals.append(Interval(1.0, 3.0))   # overlaps its predecessor
+    c.busy_s = 4.0
+    c.free_at = 3.0
+    with pytest.raises(ClockSanError, match="overlap"):
+        clocksan.verify_run([c])
+
+
+def test_free_at_desync_detected_post_hoc(sane):
+    c = _committed_clock()
+    c.free_at = 99.0
+    with pytest.raises(ClockSanError, match="free_at"):
+        clocksan.verify_run([c])
+
+
+def test_stats_fold_mismatch_raises(sane):
+    c = _committed_clock("mn_bus:0")
+    good = SimpleNamespace(resource_busy_s={"mn_bus:0": c.busy_s},
+                           resource_queue_s={"mn_bus:0": c.queue_s})
+    clocksan.verify_run([c], stats=good)
+    bad = SimpleNamespace(resource_busy_s={"mn_bus:0": c.busy_s + 1.0},
+                          resource_queue_s={"mn_bus:0": c.queue_s})
+    with pytest.raises(ClockSanError, match="resource_busy_s"):
+        clocksan.verify_run([c], stats=bad)
+
+
+def test_audit_completeness(sane):
+    clocksan.verify_run([], audit=["a", "b"], n_audit_expected=2)
+    with pytest.raises(ClockSanError, match="audit"):
+        clocksan.verify_run([], audit=["a"], n_audit_expected=2)
+
+
+def test_disabled_means_no_checks(monkeypatch):
+    """With the gate off, a booking that would trip the sanitizer only
+    hits the clock's own (cheaper) assertion — and carries no shadow."""
+    monkeypatch.delenv("REPRO_CLOCKSAN", raising=False)
+    clocksan.reset()
+    c = ResourceClock("r")
+    c.book(0.0, 0.0, 2.0)
+    with pytest.raises(AssertionError):
+        c.book(0.0, 1.0, 3.0)
+    assert clocksan._shadows.get(c) is None

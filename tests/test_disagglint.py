@@ -1,0 +1,523 @@
+"""disagglint battery (``repro.analysis``): fixture pairs per rule.
+
+Every rule gets a bad fixture (must produce exactly its expected
+finding(s)) and a good twin (zero findings).  Fixtures are string
+literals written into tmp trees that mirror the scoped directory
+structure (``<tmp>/src/repro/serving/...``) — embedding them as strings
+keeps the fixtures themselves out of the repo's own lint run, and the
+tokenize-based suppression parser means directives inside these strings
+are inert when THIS file is linted.
+
+The cross-module rules get deletion cases: removing any one serde tag,
+``EVENT_TYPES`` entry, dispatcher arm, or ``ClusterStats``
+serialization/docs entry must flip the fixture from clean to failing
+(the ISSUE's acceptance criterion).
+
+The meta-test at the bottom shells out ``python -m repro.analysis`` over
+the real tree: HEAD must lint clean, with the JSON report byte-stable.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Finding, LintResult, lint_paths, render_json
+from repro.analysis.engine import parse_suppressions
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, files, only=None):
+    """Write {relpath: source} into a tmp tree and lint it whole."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return lint_paths([str(tmp_path)], root=str(tmp_path), only=only)
+
+
+def rules_of(result):
+    return [f.rule for f in result.findings]
+
+
+# ------------------------------------------------------------ wallclock
+WALLCLOCK_BAD = """
+    import time
+
+    def stamp():
+        return time.time()
+"""
+WALLCLOCK_GOOD = """
+    def stamp(now_s):
+        return now_s
+"""
+
+
+def test_wallclock_pair(tmp_path):
+    bad = lint(tmp_path, {"src/repro/util.py": WALLCLOCK_BAD})
+    assert rules_of(bad) == ["wallclock"]
+    assert bad.findings[0].file == "src/repro/util.py"
+    good = lint(tmp_path, {"src/repro/util.py": WALLCLOCK_GOOD})
+    assert good.ok and good.files_checked == 1
+
+
+def test_wallclock_aliases_and_from_import(tmp_path):
+    src = """
+        import time as _t
+        from time import perf_counter
+
+        def f():
+            return _t.monotonic() + perf_counter()
+    """
+    res = lint(tmp_path, {"src/repro/x.py": src})
+    # the from-import and both call sites
+    assert rules_of(res) == ["wallclock"] * 3
+
+
+def test_wallclock_out_of_scope_is_silent(tmp_path):
+    res = lint(tmp_path, {"benchmarks/common.py": WALLCLOCK_BAD})
+    assert res.ok      # benchmarks measure wall time on purpose
+
+
+# ----------------------------------------------------------- global-rng
+def test_global_rng_pair(tmp_path):
+    bad = """
+        import numpy as np
+
+        def f():
+            return np.random.rand(3)
+    """
+    good = """
+        import numpy as np
+
+        def f(seed):
+            return np.random.RandomState(seed).rand(3)
+    """
+    assert rules_of(lint(tmp_path, {"src/repro/a.py": bad})) \
+        == ["global-rng"]
+    assert lint(tmp_path, {"src/repro/a.py": good}).ok
+
+
+def test_global_rng_unseeded_ctor_and_stdlib(tmp_path):
+    src = """
+        import numpy as np
+        import random
+
+        def f():
+            a = np.random.RandomState()     # unseeded: entropy
+            b = random.random()             # process-global
+            c = random.Random(7)            # fine: seeded instance
+            return a, b, c
+    """
+    res = lint(tmp_path, {"src/repro/a.py": src})
+    assert rules_of(res) == ["global-rng", "global-rng"]
+
+
+def test_global_rng_jax_prngkey_not_flagged(tmp_path):
+    src = """
+        import jax
+        from jax import random
+
+        def f(seed):
+            key = jax.random.PRNGKey(seed)
+            return random.uniform(random.PRNGKey(seed), (3,)), key
+    """
+    # `random` here is jax.random (keyed, functional), not the stdlib
+    assert lint(tmp_path, {"src/repro/a.py": src}).ok
+
+
+def test_global_rng_applies_to_examples(tmp_path):
+    bad = """
+        import numpy as np
+        x = np.random.rand(4)
+    """
+    assert rules_of(lint(tmp_path, {"examples/demo.py": bad})) \
+        == ["global-rng"]
+
+
+# ------------------------------------------------------------- set-iter
+def test_set_iter_pair(tmp_path):
+    bad = """
+        def order(names):
+            dead = {3, 1, 2}
+            out = []
+            for j in dead:
+                out.append(j)
+            return out
+    """
+    good = """
+        def order(names):
+            dead = {3, 1, 2}
+            return [j for j in sorted(dead)]
+    """
+    assert rules_of(lint(tmp_path, {"src/repro/serving/x.py": bad})) \
+        == ["set-iter"]
+    assert lint(tmp_path, {"src/repro/serving/x.py": good}).ok
+
+
+def test_set_iter_comprehension_and_scope(tmp_path):
+    bad = """
+        def f(xs):
+            return [x for x in set(xs)]
+    """
+    assert rules_of(lint(tmp_path / "a", {"src/repro/serving/y.py": bad})) \
+        == ["set-iter"]
+    # outside serving/ the rule is silent (order doesn't feed a clock)
+    assert lint(tmp_path / "b", {"src/repro/core/y.py": bad}).ok
+
+
+# ------------------------------------------------------- frozen-setattr
+def test_frozen_setattr_pair(tmp_path):
+    bad = """
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class Spec:
+            x: int
+
+            def bump(self):
+                object.__setattr__(self, "x", self.x + 1)
+    """
+    good = """
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class Spec:
+            x: int
+
+            def __post_init__(self):
+                object.__setattr__(self, "x", int(self.x))
+    """
+    assert rules_of(lint(tmp_path, {"src/repro/spec.py": bad})) \
+        == ["frozen-setattr"]
+    assert lint(tmp_path, {"src/repro/spec.py": good}).ok
+
+
+# -------------------------------------------------------- registry-sync
+REGISTRY_SCENARIO = """
+    class ScenarioEvent:
+        time_s: float
+
+    class FailMN(ScenarioEvent):
+        kind = "fail_mn"
+
+    class Extra(ScenarioEvent):
+        kind = "extra"
+
+    EVENT_TYPES = {c.kind: c for c in (FailMN, Extra)}
+"""
+REGISTRY_TIMELINE = """
+    class TimelineDispatcher:
+        def _apply(self, ev):
+            if isinstance(ev, FailMN):
+                return "fail"
+            elif isinstance(ev, Extra):
+                return "extra"
+"""
+
+
+def test_registry_sync_clean(tmp_path):
+    res = lint(tmp_path, {"src/repro/serving/scenario.py": REGISTRY_SCENARIO,
+                          "src/repro/serving/timeline.py": REGISTRY_TIMELINE},
+               only=["registry-sync"])
+    assert res.ok
+
+
+def test_registry_sync_missing_kind(tmp_path):
+    broken = REGISTRY_SCENARIO.replace('kind = "extra"', "pass")
+    res = lint(tmp_path, {"src/repro/serving/scenario.py": broken,
+                          "src/repro/serving/timeline.py": REGISTRY_TIMELINE},
+               only=["registry-sync"])
+    assert rules_of(res) == ["registry-sync"]
+    assert "kind" in res.findings[0].message
+
+
+def test_registry_sync_missing_event_types_entry(tmp_path):
+    broken = REGISTRY_SCENARIO.replace("(FailMN, Extra)", "(FailMN,)")
+    res = lint(tmp_path, {"src/repro/serving/scenario.py": broken,
+                          "src/repro/serving/timeline.py": REGISTRY_TIMELINE},
+               only=["registry-sync"])
+    assert rules_of(res) == ["registry-sync"]
+    assert "EVENT_TYPES" in res.findings[0].message
+
+
+def test_registry_sync_missing_dispatch_arm(tmp_path):
+    broken = REGISTRY_TIMELINE.replace(
+        """elif isinstance(ev, Extra):
+                return "extra\"""", "")
+    res = lint(tmp_path, {"src/repro/serving/scenario.py": REGISTRY_SCENARIO,
+                          "src/repro/serving/timeline.py": broken},
+               only=["registry-sync"])
+    assert rules_of(res) == ["registry-sync"]
+    assert "dispatch arm" in res.findings[0].message
+
+
+def test_registry_sync_silent_without_anchors(tmp_path):
+    # linting a tree with no ScenarioEvent at all: nothing to check
+    res = lint(tmp_path, {"src/repro/other.py": "x = 1\n"},
+               only=["registry-sync"])
+    assert res.ok
+
+
+# ---------------------------------------------------------- stats-drift
+STATS_CLUSTER = """
+    class ClusterStats:
+        completed: int
+        p95: float
+"""
+STATS_TIMELINE = """
+    def run():
+        return ClusterStats(completed=1, p95=0.0)
+"""
+STATS_DOCS = "| `completed` | queries | | `p95` | seconds |\n"
+
+
+def _stats_tree(tmp_path, cluster=STATS_CLUSTER, timeline=STATS_TIMELINE,
+                docs=STATS_DOCS):
+    (tmp_path / "docs").mkdir(parents=True, exist_ok=True)
+    (tmp_path / "docs" / "architecture.md").write_text(docs)
+    return lint(tmp_path, {"src/repro/serving/cluster.py": cluster,
+                           "src/repro/serving/timeline.py": timeline},
+                only=["stats-drift"])
+
+
+def test_stats_drift_clean(tmp_path):
+    assert _stats_tree(tmp_path).ok
+
+
+def test_stats_drift_missing_serialization_kwarg(tmp_path):
+    res = _stats_tree(
+        tmp_path,
+        timeline=STATS_TIMELINE.replace(", p95=0.0", ""))
+    assert rules_of(res) == ["stats-drift"]
+    assert "p95" in res.findings[0].message
+
+
+def test_stats_drift_missing_docs_entry(tmp_path):
+    res = _stats_tree(tmp_path, docs="| `completed` | queries |\n")
+    assert rules_of(res) == ["stats-drift"]
+    assert "docs" in res.findings[0].message
+
+
+# ------------------------------------------------------------- cli-sync
+CLI_GOOD = """
+    import argparse
+
+    class Topology:
+        n_cn: int
+        m_mn: int
+
+    def build(argv):
+        p = argparse.ArgumentParser()
+        p.add_argument("--n-cn", type=int, default=2)
+        p.add_argument("--m-mn", type=int, default=4)
+        args = p.parse_args(argv)
+        return Topology(n_cn=args.n_cn, m_mn=args.m_mn)
+"""
+
+
+def test_cli_sync_clean(tmp_path):
+    assert lint(tmp_path, {"src/repro/launch/serve.py": CLI_GOOD},
+                only=["cli-sync"]).ok
+
+
+def test_cli_sync_dead_flag(tmp_path):
+    broken = CLI_GOOD.replace(
+        'p.add_argument("--m-mn", type=int, default=4)',
+        'p.add_argument("--m-mn", type=int, default=4)\n'
+        '        p.add_argument("--orphan", type=int, default=0)')
+    res = lint(tmp_path, {"src/repro/launch/serve.py": broken},
+               only=["cli-sync"])
+    assert rules_of(res) == ["cli-sync"]
+    assert "orphan" in res.findings[0].message
+
+
+def test_cli_sync_unknown_spec_keyword(tmp_path):
+    broken = CLI_GOOD.replace("m_mn=args.m_mn", "m_mns=args.m_mn")
+    res = lint(tmp_path, {"src/repro/launch/serve.py": broken},
+               only=["cli-sync"])
+    assert rules_of(res) == ["cli-sync"]
+    assert "m_mns" in res.findings[0].message
+
+
+# ------------------------------------------------------- pallas-hygiene
+PALLAS_GOOD = """
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[0] = x_ref[0]
+
+    def run(x, interpret=False):
+        spec = pl.BlockSpec((1, 4), lambda i: (i, 0))
+        return pl.pallas_call(kernel, out_shape=None,
+                              interpret=interpret)(x)
+"""
+
+
+def test_pallas_clean(tmp_path):
+    assert lint(tmp_path, {"src/repro/kernels/k.py": PALLAS_GOOD},
+                only=["pallas-hygiene"]).ok
+
+
+def test_pallas_missing_interpret(tmp_path):
+    broken = PALLAS_GOOD.replace(",\n                              "
+                                 "interpret=interpret", "")
+    res = lint(tmp_path, {"src/repro/kernels/k.py": broken},
+               only=["pallas-hygiene"])
+    assert rules_of(res) == ["pallas-hygiene"]
+    assert "interpret" in res.findings[0].message
+
+
+def test_pallas_python_branch_on_ref(tmp_path):
+    broken = PALLAS_GOOD.replace(
+        "o_ref[0] = x_ref[0]",
+        "if x_ref[0] > 0:\n            o_ref[0] = 1")
+    res = lint(tmp_path, {"src/repro/kernels/k.py": broken},
+               only=["pallas-hygiene"])
+    assert rules_of(res) == ["pallas-hygiene"]
+    assert "pl.when" in res.findings[0].message
+
+
+def test_pallas_dynamic_block_shape(tmp_path):
+    broken = PALLAS_GOOD.replace("pl.BlockSpec((1, 4)",
+                                 "pl.BlockSpec((pick(), 4)")
+    res = lint(tmp_path, {"src/repro/kernels/k.py": broken},
+               only=["pallas-hygiene"])
+    assert rules_of(res) == ["pallas-hygiene"]
+    assert "static" in res.findings[0].message
+
+
+def test_pallas_silent_without_pallas_import(tmp_path):
+    src = """
+        def run(x):
+            return pallas_call(x)     # not a pallas module: no import
+    """
+    assert lint(tmp_path, {"src/repro/kernels/k.py": src},
+                only=["pallas-hygiene"]).ok
+
+
+# ------------------------------------------------------------- clock-eq
+def test_clock_eq_pair(tmp_path):
+    bad = """
+        def same(start_s, end_s):
+            return start_s == end_s
+    """
+    good = """
+        def same(start_s, end_s, tol):
+            assert start_s == end_s        # declared exact-parity pin
+            return abs(start_s - end_s) <= tol
+    """
+    assert rules_of(lint(tmp_path, {"src/repro/t.py": bad})) \
+        == ["clock-eq"]
+    assert lint(tmp_path, {"src/repro/t.py": good}).ok
+
+
+def test_clock_eq_out_of_scope_in_tests(tmp_path):
+    bad = "def f(a_s, b_s):\n    return a_s == b_s\n"
+    assert lint(tmp_path, {"tests/test_x.py": bad}).ok
+
+
+# --------------------------------------------------------- suppressions
+def test_suppression_with_reason_suppresses(tmp_path):
+    src = """
+        import time
+
+        def stamp():
+            return time.time()  # disagglint: disable=wallclock -- fixture exercising the suppression path
+    """
+    res = lint(tmp_path, {"src/repro/u.py": src})
+    assert res.ok
+    assert res.suppressed == 1
+
+
+def test_suppression_without_reason_is_a_finding(tmp_path):
+    src = """
+        import time
+
+        def stamp():
+            return time.time()  # disagglint: disable=wallclock
+    """
+    res = lint(tmp_path, {"src/repro/u.py": src})
+    # the reasonless directive is itself flagged AND does not suppress
+    assert sorted(rules_of(res)) == ["bad-suppression", "wallclock"]
+
+
+def test_suppression_wrong_rule_does_not_suppress(tmp_path):
+    src = """
+        import time
+
+        def stamp():
+            return time.time()  # disagglint: disable=clock-eq -- wrong rule on purpose
+    """
+    res = lint(tmp_path, {"src/repro/u.py": src})
+    assert rules_of(res) == ["wallclock"]
+
+
+def test_directive_inside_string_is_inert():
+    src = ('BAD = "x = 1  # disagglint: disable=wallclock"\n'
+           'y = 2  # disagglint: disable=clock-eq -- a real comment\n')
+    sups, problems = parse_suppressions(src)
+    assert [s.line for s in sups] == [2]
+    assert problems == []
+
+
+# ---------------------------------------------------- engine & reporters
+def test_parse_error_is_a_finding(tmp_path):
+    res = lint(tmp_path, {"src/repro/broken.py": "def f(:\n"})
+    assert rules_of(res) == ["parse-error"]
+    assert res.exit_code() == 1
+
+
+def test_json_report_is_byte_stable():
+    r = LintResult(findings=[
+        Finding("b.py", 2, "wallclock", "msg"),
+        Finding("a.py", 9, "clock-eq", "msg"),
+    ], files_checked=2)
+    one, two = render_json(r), render_json(r)
+    assert one == two
+    doc = json.loads(one)
+    # findings sorted by (file, line), keys sorted
+    assert [f["file"] for f in doc["findings"]] == ["a.py", "b.py"]
+    assert list(doc) == sorted(doc)
+    assert doc["ok"] is False
+
+
+def test_cli_json_and_exit_codes(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    f = tmp_path / "src" / "repro" / "m.py"
+    f.write_text("import time\nx = time.time()\n")
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src",
+         "--root", str(tmp_path), "--format", "json"],
+        cwd=tmp_path, env=env, capture_output=True, text=True)
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["findings"][0]["rule"] == "wallclock"
+    f.write_text("x = 1\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src",
+         "--root", str(tmp_path), "--format", "json"],
+        cwd=tmp_path, env=env, capture_output=True, text=True)
+    assert proc.returncode == 0
+    assert json.loads(proc.stdout)["ok"] is True
+
+
+# ------------------------------------------------------------ meta-test
+def test_head_lints_clean():
+    """Tier-1 acceptance: the repo's own tree passes its own linter —
+    src, tests, benchmarks, and examples — with every suppression
+    carrying a reason (reasonless ones are findings and would fail)."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "tests",
+         "benchmarks", "examples", "--format", "json"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    doc = json.loads(proc.stdout)
+    assert proc.returncode == 0, doc["findings"]
+    assert doc["ok"] is True
+    assert doc["files_checked"] > 50
