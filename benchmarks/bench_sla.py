@@ -24,14 +24,26 @@ Three experiments over the virtual-clock serving stack:
    bench asserts hedging reduces p99 AND that scores stay
    bitwise-identical — hedging moves time, never values.
 
-  PYTHONPATH=src python -m benchmarks.bench_sla [--smoke]
+4. **Router x controller grid** — the flash crowd served under every
+   ``cn_router`` policy x {coupled, decoupled} SLA scaling.  The crowd
+   is compute-bound, so the coupled controller's lockstep steps buy MNs
+   that never help; the decoupled controller attributes the breach to
+   the CN pool and leaves the MN pool at its floor.  The bench asserts
+   decoupled holds p99 at least as well as coupled in every router with
+   strictly fewer MN node-seconds, and that ``pipeline_free`` beats the
+   legacy ``cpu_free`` tail in both modes.  ``--json PATH`` dumps the
+   grid for CI artifacts.
+
+  PYTHONPATH=src python -m benchmarks.bench_sla [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
 
+from repro.serving.cluster import CN_ROUTERS
 from repro.serving.scenario import (DegradeMN, ScenarioSpec, Workload,
                                     preset, run_scenario, smoke_topology)
 
@@ -40,6 +52,7 @@ from benchmarks.common import row
 SEED = 7
 GAP_S = 1e-6          # shared mean inter-arrival for the sweep
 ARRIVALS = ("linear", "poisson", "bursty")
+SLA_MODES = ("coupled", "decoupled")
 
 
 def _arrival_spec(kind: str, n: int) -> ScenarioSpec:
@@ -77,6 +90,10 @@ def flash_crowd(n: int) -> dict:
         f"controlled tail)")
     if not on.sla_actions:
         raise AssertionError("SLA controller never acted on the crowd")
+    if not on.sla_window_filled:
+        raise AssertionError(
+            "p99 window never filled — the crowd is too short for the "
+            "controller to see")
     if not on.p99 < off.p99:
         raise AssertionError(
             f"controller failed to hold p99: on={on.p99:g} "
@@ -87,6 +104,79 @@ def flash_crowd(n: int) -> dict:
             f"pool did not return to its floor: "
             f"{{{rep_on.final_n_cn}, {rep_on.final_m_mn}}}")
     return {"on": on, "off": off}
+
+
+def _mn_node_seconds(spec: ScenarioSpec, rep) -> float:
+    """MN capacity actually provisioned over the run: integrate the MN
+    pool size across the audit trail (each ``EventRecord`` carries the
+    pool it left behind) from t=0 to the makespan.  This is the TCO
+    denominator the decoupled controller exists to shrink."""
+    st = rep.stats
+    m, t, total = spec.topology.m_mn, 0.0, 0.0
+    for r in st.events:
+        tt = min(max(r.time_s, t), st.makespan_s)
+        total += m * (tt - t)
+        t, m = tt, r.m_mn
+    return total + m * max(0.0, st.makespan_s - t)
+
+
+def router_controller_grid(n: int) -> dict:
+    spec = preset("flash_crowd")
+    spec = dataclasses.replace(
+        spec, workload=dataclasses.replace(spec.workload, requests=n))
+    grid: dict = {}
+    for router in CN_ROUTERS:
+        for mode in SLA_MODES:
+            s = dataclasses.replace(
+                spec, sla_mode=mode,
+                topology=dataclasses.replace(spec.topology,
+                                             cn_router=router))
+            rep = run_scenario(s)
+            st = rep.stats
+            cell = {
+                "router": router, "mode": mode,
+                "p99_us": st.p99 * 1e6,
+                "sla_actions": st.sla_actions,
+                "sla_actions_cn": st.sla_actions_cn,
+                "sla_actions_mn": st.sla_actions_mn,
+                "mn_node_seconds": _mn_node_seconds(s, rep),
+                "window_filled": st.sla_window_filled,
+            }
+            grid[(router, mode)] = cell
+            row(f"sla_grid_{router}_{mode}_p99_us", cell["p99_us"],
+                f"{st.sla_actions} actions ({st.sla_actions_cn} CN-dim, "
+                f"{st.sla_actions_mn} MN-dim), "
+                f"{cell['mn_node_seconds'] * 1e3:.3f} MN node-ms")
+            if not st.sla_actions:
+                raise AssertionError(
+                    f"{router}/{mode}: controller never acted on the "
+                    f"crowd")
+            if not st.sla_window_filled:
+                raise AssertionError(
+                    f"{router}/{mode}: p99 window never filled")
+    for router in CN_ROUTERS:
+        coup, dec = grid[(router, "coupled")], grid[(router, "decoupled")]
+        # the crowd is compute-bound: decoupling must hold the tail at
+        # least as well while provisioning strictly less MN capacity
+        if dec["p99_us"] > coup["p99_us"]:
+            raise AssertionError(
+                f"{router}: decoupled p99 {dec['p99_us']:.1f}us worse "
+                f"than coupled {coup['p99_us']:.1f}us")
+        if not dec["mn_node_seconds"] < coup["mn_node_seconds"]:
+            raise AssertionError(
+                f"{router}: decoupled bought as much MN capacity as "
+                f"coupled ({dec['mn_node_seconds']:g} vs "
+                f"{coup['mn_node_seconds']:g} node-s)")
+        if dec["sla_actions_mn"] >= coup["sla_actions_mn"]:
+            raise AssertionError(
+                f"{router}: decoupled emitted {dec['sla_actions_mn']} "
+                f"MN-dim actions, coupled {coup['sla_actions_mn']}")
+    for mode in SLA_MODES:
+        if (grid[("pipeline_free", mode)]["p99_us"]
+                >= grid[("cpu_free", mode)]["p99_us"]):
+            raise AssertionError(
+                f"{mode}: pipeline_free did not beat cpu_free p99")
+    return grid
 
 
 def straggler_hedge(n: int, factor: float = 8.0) -> dict:
@@ -123,6 +213,7 @@ def run(smoke: bool = False) -> dict:
         "arrivals": sweep_arrivals(n_sweep),
         "flash_crowd": flash_crowd(n_flash),
         "straggler": straggler_hedge(n_strag),
+        "grid": router_controller_grid(n_flash),
     }
 
 
@@ -130,8 +221,16 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized runs (same assertions)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="dump the router x controller grid as a JSON "
+                        "artifact")
     args = p.parse_args(argv)
-    run(smoke=args.smoke)
+    out = run(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sla_grid": list(out["grid"].values())}, f,
+                      indent=2)
+        print(f"[bench_sla] grid written to {args.json}")
     return 0
 
 

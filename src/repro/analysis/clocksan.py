@@ -177,6 +177,27 @@ def verify_run(clocks, stats=None, audit=None,
             problems.append(
                 f"{c.name}: clock diverged from its shadow — "
                 f"out-of-band mutation between bookings")
+    # a batch's pre stage commits on exactly one CN cpu incarnation: a
+    # CN shrink hands the pre off to a survivor, and the superseded
+    # booking on the retired clock must be charged as an abort — a
+    # second non-aborted commit of the same tag means retired busy time
+    # is double-counted (phantom booking).  Scoped to cn_cpu: bus/NIC
+    # clocks legitimately re-book a tag (hedges, failure re-issues).
+    pre_commit: Dict[int, str] = {}
+    for c in clocks:
+        if not c.name.startswith("cn_cpu"):
+            continue
+        for iv in c.intervals:
+            if iv.aborted or iv.tag < 0:
+                continue
+            prev = pre_commit.get(iv.tag)
+            if prev is not None:
+                problems.append(
+                    f"{c.name}: pre stage of batch tag={iv.tag} already "
+                    f"committed on {prev} — phantom booking on a "
+                    f"retired CN (busy time not conserved)")
+            else:
+                pre_commit[iv.tag] = c.name
     if stats is not None:
         busy_f, queue_f = _fold_resources(clocks)
         if dict(stats.resource_busy_s) != busy_f:

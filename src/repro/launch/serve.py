@@ -68,6 +68,7 @@ def spec_from_flags(args) -> ScenarioSpec:
             mn_types=mn_types, cache_mb=args.cache_mb,
             cache_policy=args.cache_policy,
             inflight_depth=args.inflight_depth,
+            cn_router=args.cn_router,
             hedge_multiplier=args.hedge_multiplier),
         workload=Workload(requests=args.requests, mean_size=8.0,
                           max_size=4 * args.batch, alpha=args.alpha,
@@ -77,6 +78,7 @@ def spec_from_flags(args) -> ScenarioSpec:
                           trace_path=args.trace),
         sla_p99_s=(args.sla_p99_ms / 1e3
                    if args.sla_p99_ms is not None else None),
+        sla_mode=args.sla_mode,
         events=tuple(events),
     )
 
@@ -135,6 +137,15 @@ def main(argv=None):
                         "the pre-pipeline model)")
     p.add_argument("--cache-policy", default="lru", choices=["lru", "lfu"],
                    help="hot-row cache eviction policy")
+    p.add_argument("--cn-router", default="cpu_free",
+                   choices=["cpu_free", "pipeline_free",
+                            "least_outstanding"],
+                   help="batch -> CN placement policy (cluster mode): "
+                        "cpu_free routes on the preprocess core's "
+                        "free_at (legacy, bitwise parity), pipeline_free "
+                        "on the whole cpu/nic/gpu pipeline drain, "
+                        "least_outstanding on fewest uncommitted "
+                        "bookings")
     p.add_argument("--arrival", default="linear",
                    choices=["linear", "poisson", "bursty", "trace"],
                    help="arrival process of the request stream (cluster "
@@ -151,6 +162,12 @@ def main(argv=None):
                         "the feedback SLAController, which watches the "
                         "measured sliding-window p99 and emits live "
                         "Resize events to hold it under the target")
+    p.add_argument("--sla-mode", default="coupled",
+                   choices=["coupled", "decoupled"],
+                   help="SLA controller scaling split (with --sla-p99-ms)"
+                        ": coupled steps both pools in lockstep; "
+                        "decoupled attributes each breach to the binding "
+                        "pool and emits partial per-pool resizes")
     p.add_argument("--hedge-multiplier", type=float, default=0.0,
                    help="hedged re-issue of straggling MN scans: re-issue "
                         "on a replica once a scan exceeds this multiple "

@@ -154,18 +154,34 @@ class Autoscaler:
 class SLAControllerConfig:
     """Feedback-control knobs.  The controller holds measured p99 inside
     ``[band_low * sla_p99_s, sla_p99_s]``: above the target it scales
-    both pools up by ``step``; below the lower band edge it scales back
-    down — hysteresis that keeps a noisy tail from thrashing the pool.
+    up by ``step``; below the lower band edge it scales back down —
+    hysteresis that keeps a noisy tail from thrashing the pool.
     ``window`` completions form the sliding p99 estimate (nearest-rank,
     the serving layer's percentile convention) and ``cooldown``
-    completions must pass between actions so each resize's effect is
-    *measured* before the next decision."""
+    completions must pass between actions; the window is cleared on
+    every emission, so each resize's effect is *measured* before the
+    next decision (a stale window would re-trigger on the same breach).
+
+    ``mode`` picks the scaling split — the paper's decoupled-scaling
+    claim applied to feedback control:
+
+    - ``coupled`` (default): a breach steps both pools in lockstep.
+    - ``decoupled``: a breach is attributed to the *binding* pool via
+      the dispatcher's per-node queueing pressure — scale CNs for a
+      compute/gather-bound tail, MNs for a scan/bus-bound tail, and
+      both only when the two pressures sit within a ``mix_band`` factor
+      of each other (genuinely mixed).  Scale-down releases both pools
+      toward their floors; every emitted ``Resize`` carries only the
+      dims that actually change (partial events)."""
     sla_p99_s: float
     window: int = 32
     band_low: float = 0.5
     cooldown: int = 16
     step: int = 1
     max_scale: int = 4            # pool ceiling: max_scale x initial
+    mode: str = "coupled"         # coupled | decoupled
+    mix_band: float = 2.0         # decoupled: pressures within this
+                                  # factor of each other scale both
 
 
 class SLAController:
@@ -191,6 +207,10 @@ class SLAController:
             raise ValueError("band_low must be in [0, 1)")
         if cfg.max_scale < 1:
             raise ValueError("max_scale must be >= 1")
+        if cfg.mode not in ("coupled", "decoupled"):
+            raise ValueError(f"unknown SLA controller mode {cfg.mode!r}")
+        if cfg.mix_band < 1.0:
+            raise ValueError("mix_band must be >= 1")
         self.cfg = cfg
         self.min_cn, self.min_mn = int(n_cn), int(m_mn)
         self.max_cn = self.min_cn * cfg.max_scale
@@ -200,32 +220,64 @@ class SLAController:
         self._since = 0             # completions since the last action
         self._last_emit = 0.0
         self.actions: List[Resize] = []     # every event ever emitted
+        self.window_filled = False  # ever saw a full p99 window (a run
+                                    # shorter than cfg.window can never
+                                    # trigger an action — surfaced as
+                                    # ClusterStats.sla_window_filled)
 
     def p99(self) -> float:
         """Current sliding-window p99 (nan until anything completed)."""
         return nearest_rank(list(self._lats), 99)
 
-    def observe(self, t_done_s: float, latency_s: float) -> List[Resize]:
-        """Feed one completion; returns the Resize events to enqueue."""
+    def observe(self, t_done_s: float, latency_s: float,
+                pressure: Optional[Tuple[float, float]] = None
+                ) -> List[Resize]:
+        """Feed one completion; returns the Resize events to enqueue.
+
+        ``pressure`` is the dispatcher's per-node accumulated queueing
+        seconds per pool ``(cn, mn)`` — the binding-pool attribution
+        signal decoupled mode scales by (coupled mode ignores it)."""
         self._lats.append(float(latency_s))
         self._since += 1
-        if (len(self._lats) < self.cfg.window
-                or self._since < self.cfg.cooldown):
+        if len(self._lats) < self.cfg.window:
+            return []
+        self.window_filled = True
+        if self._since < self.cfg.cooldown:
             return []
         p99 = self.p99()
         n, m = self.n_cn, self.m_mn
         if p99 > self.cfg.sla_p99_s:
-            n = min(n + self.cfg.step, self.max_cn)
-            m = min(m + self.cfg.step, self.max_mn)
+            up_cn = up_mn = True
+            if self.cfg.mode == "decoupled" and pressure is not None:
+                cn_p, mn_p = pressure
+                # binding-pool attribution: scale the pool whose
+                # per-node queueing dominates; both only when the two
+                # pressures sit within a mix_band factor (genuinely
+                # mixed).  Equal (e.g. both-zero) pressure degenerates
+                # to the coupled step.
+                up_cn = cn_p * self.cfg.mix_band >= mn_p
+                up_mn = mn_p * self.cfg.mix_band >= cn_p
+            if up_cn:
+                n = min(n + self.cfg.step, self.max_cn)
+            if up_mn:
+                m = min(m + self.cfg.step, self.max_mn)
         elif p99 < self.cfg.band_low * self.cfg.sla_p99_s:
             n = max(n - self.cfg.step, self.min_cn)
             m = max(m - self.cfg.step, self.min_mn)
         if (n, m) == (self.n_cn, self.m_mn):
             return []
+        # partial event: only the dims that change ride on the Resize
+        # (timeline accepts n_cn=None/m_mn=None as "keep")
+        dn = n if n != self.n_cn else None
+        dm = m if m != self.m_mn else None
         self.n_cn, self.m_mn = n, m
         self._since = 0
+        # every completion in the window predates this action; measuring
+        # them again would double-step the same breach before the
+        # resize's effect shows (real whenever cooldown < window)
+        self._lats.clear()
         self._last_emit = max(self._last_emit, float(t_done_s))
-        ev = Resize(self._last_emit, n_cn=n, m_mn=m)
+        ev = Resize(self._last_emit, n_cn=dn, m_mn=dm)
         self.actions.append(ev)
         return [ev]
 

@@ -140,6 +140,12 @@ def parse_mn_types(spec: str, m_mn: int) -> List[str]:
     return _validate_mn_types(types, m_mn)
 
 
+#: batch -> CN placement policies (ClusterConfig.cn_router /
+#: topology.cn_router / --cn-router); cpu_free is the bitwise-parity
+#: legacy default
+CN_ROUTERS = ("cpu_free", "pipeline_free", "least_outstanding")
+
+
 @dataclass
 class ClusterConfig:
     n_cn: int = 2                 # serving-unit compute nodes (= tasks)
@@ -160,6 +166,15 @@ class ClusterConfig:
                                   # with the pre-pipeline engine), >1 =
                                   # pipelined overlap on per-resource
                                   # FIFO queues (serving.pipeline)
+    cn_router: str = "cpu_free"   # batch -> CN placement policy
+                                  # (serving.timeline._route_cn):
+                                  # cpu_free = earliest-free preprocess
+                                  # core (legacy, bitwise parity);
+                                  # pipeline_free = earliest drain of
+                                  # the CN's whole cpu/nic/gpu pipeline;
+                                  # least_outstanding = fewest
+                                  # uncommitted bookings (JSQ).  Ties
+                                  # break to the lowest index everywhere.
     hedge_multiplier: float = 0.0  # straggler mitigation (FlexEMR
                                   # optimistic get): a scan projected to
                                   # exceed hedge_multiplier x its nominal
@@ -223,6 +238,12 @@ class ClusterStats:
     hedge_wins: int = 0           # hedges that finished before the original
     # SLA feedback control (serving.autoscaler.SLAController)
     sla_actions: int = 0          # Resize events the controller emitted
+    sla_actions_cn: int = 0       # ... that resized the CN pool
+    sla_actions_mn: int = 0       # ... that resized the MN pool
+    sla_window_filled: bool = True   # False only when a controller was
+                                  # attached but its p99 window never
+                                  # filled (run shorter than cfg.window:
+                                  # the controller silently saw nothing)
     resource_busy_s: Dict[str, float] = field(default_factory=dict)
     resource_queue_s: Dict[str, float] = field(default_factory=dict)
     resource_util: Dict[str, float] = field(default_factory=dict)

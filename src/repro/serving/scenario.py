@@ -60,7 +60,7 @@ import numpy as np
 from repro.core.hardware import NODE_TYPES
 from repro.data.queries import (ARRIVALS, ArrivalProcess, QueryDist,
                                 dlrm_batch, load_trace)
-from repro.serving.cluster import (ClusterConfig, ClusterEngine,
+from repro.serving.cluster import (CN_ROUTERS, ClusterConfig, ClusterEngine,
                                    ClusterStats, _validate_mn_types)
 from repro.serving.engine import Request, Result
 
@@ -288,6 +288,9 @@ class Topology:
     # max batches concurrently inside the MN stage (1 = sequential
     # clock, bitwise-identical to the pre-pipeline model)
     inflight_depth: int = 1
+    # batch -> CN placement policy (ClusterConfig.cn_router): cpu_free
+    # (legacy, bitwise parity) | pipeline_free | least_outstanding
+    cn_router: str = "cpu_free"
     # hedged re-issue of straggling MN scans: a scan whose projected
     # duration exceeds hedge_multiplier x its nominal (degradation-free)
     # duration is re-issued on the fastest live replica at the detection
@@ -312,6 +315,7 @@ class Topology:
                       else None),
             cache_mb=self.cache_mb, cache_policy=self.cache_policy,
             inflight_depth=self.inflight_depth,
+            cn_router=self.cn_router,
             hedge_multiplier=self.hedge_multiplier,
             seed=seed, **extra)
 
@@ -358,6 +362,11 @@ class ScenarioSpec:
     # latencies and emits Resize events through the live timeline.
     # None (the default) keeps serving schedule-driven.
     sla_p99_s: Optional[float] = None
+    # SLA controller scaling split (SLAControllerConfig.mode): coupled
+    # (default — a breach steps both pools in lockstep) | decoupled
+    # (binding-pool attribution via per-node queueing pressure emits
+    # partial per-pool Resize events).  Only meaningful with sla_p99_s.
+    sla_mode: str = "coupled"
 
     # ---------------------------------------------------------- serde
     def to_dict(self) -> Dict[str, Any]:
@@ -373,6 +382,8 @@ class ScenarioSpec:
         }
         if self.sla_p99_s is not None:
             d["sla_p99_s"] = self.sla_p99_s
+        if self.sla_mode != "coupled":
+            d["sla_mode"] = self.sla_mode
         return d
 
     @classmethod
@@ -381,7 +392,7 @@ class ScenarioSpec:
         if "name" not in d:
             raise ValueError("scenario spec needs a name")
         known = {"name", "description", "model", "topology", "workload",
-                 "events", "sla_p99_s"}
+                 "events", "sla_p99_s", "sla_mode"}
         unknown = sorted(set(d) - known)
         if unknown:
             raise ValueError(
@@ -397,6 +408,7 @@ class ScenarioSpec:
             workload=_build(Workload, d.get("workload") or {}, "workload"),
             events=tuple(event_from_dict(e) for e in d.get("events") or ()),
             sla_p99_s=d.get("sla_p99_s"),
+            sla_mode=d.get("sla_mode", "coupled"),
         )
 
     def to_json(self) -> str:
@@ -453,6 +465,9 @@ class ScenarioSpec:
             raise ValueError("topology inflight_depth must be >= 1")
         if t.cache_policy not in ("lru", "lfu"):
             raise ValueError(f"unknown cache policy {t.cache_policy!r}")
+        if t.cn_router not in CN_ROUTERS:
+            raise ValueError(f"unknown cn_router {t.cn_router!r} "
+                             f"(known: {CN_ROUTERS})")
         if t.cache_mb < 0:
             raise ValueError("topology cache_mb must be >= 0")
         if t.cn_type not in NODE_TYPES or NODE_TYPES[t.cn_type].kind != "cn":
@@ -492,6 +507,9 @@ class ScenarioSpec:
                 not _is_num(self.sla_p99_s) or self.sla_p99_s <= 0):
             raise ValueError(f"sla_p99_s must be a positive number, "
                              f"got {self.sla_p99_s!r}")
+        if self.sla_mode not in ("coupled", "decoupled"):
+            raise ValueError(f"unknown sla_mode {self.sla_mode!r} "
+                             f"(known: coupled, decoupled)")
         validate_events(self.events, t.m_mn)
 
 
@@ -700,7 +718,14 @@ class ScenarioReport:
         if st.sla_actions:
             lines.append(
                 f"[scenario] SLA feedback: controller emitted "
-                f"{st.sla_actions} resize action(s)")
+                f"{st.sla_actions} resize action(s) "
+                f"({st.sla_actions_cn} CN-dim, {st.sla_actions_mn} "
+                f"MN-dim)")
+        if not st.sla_window_filled:
+            lines.append(
+                "[scenario] SLA feedback: warning — the p99 window "
+                "never filled (run shorter than the controller window; "
+                "no action could fire)")
         mem = sum(st.mn_access_bytes) + st.retired_access_bytes
         gat = sum(st.mn_gather_bytes) + st.retired_gather_bytes
         if any("nmp" in t for t in self.mn_types) and mem:
@@ -802,7 +827,8 @@ def run_scenario(spec: ScenarioSpec, model=None, params=None, stream=None
         from repro.serving.autoscaler import (SLAController,
                                               SLAControllerConfig)
         controller = SLAController(
-            SLAControllerConfig(sla_p99_s=spec.sla_p99_s),
+            SLAControllerConfig(sla_p99_s=spec.sla_p99_s,
+                                mode=spec.sla_mode),
             n_cn=spec.topology.n_cn, m_mn=spec.topology.m_mn)
     results, stats = engine.serve(reqs, events=spec.events,
                                   controller=controller)

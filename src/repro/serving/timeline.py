@@ -80,7 +80,7 @@ from repro.analysis import clocksan
 from repro.core import embedding_manager as em
 from repro.core import hardware as hw
 from repro.core.scheduler import Batch, Batcher, Query
-from repro.serving.cluster import ClusterStats
+from repro.serving.cluster import CN_ROUTERS, ClusterStats
 from repro.serving.engine import Request, Result
 from repro.serving.pipeline import (AdmissionWindow, BatchTrace, HedgeIssue,
                                     MNPlan, fit_clocks, summarize_resources)
@@ -125,6 +125,10 @@ class TimelineDispatcher:
     def __init__(self, engine, requests: Sequence[Request],
                  events: Sequence[ScenarioEvent], controller=None):
         self.eng = engine
+        if engine.cfg.cn_router not in CN_ROUTERS:
+            raise ValueError(
+                f"unknown cn_router {engine.cfg.cn_router!r}; "
+                f"choose from {CN_ROUTERS}")
         self.requests = list(requests)
         self.queue: List[ScenarioEvent] = sort_events(events)
         validate_events(self.queue, engine.m_mn)
@@ -134,6 +138,13 @@ class TimelineDispatcher:
         # its emitted Resize events join the live queue
         self.controller = controller
         self.sla_actions = 0
+        self.sla_actions_cn = 0
+        self.sla_actions_mn = 0
+        # retire instant of every clock a CN shrink removed, keyed by
+        # object id (safe: the registry keeps retired clocks alive, so
+        # ids are never reused within a run) — the truncation point for
+        # a superseded pre-stage booking's abort charge
+        self._retire_s: Dict[int, float] = {}
         # audit-completeness accounting (checked by clocksan when
         # REPRO_CLOCKSAN=1): every event ever on the queue — initial
         # timeline plus dynamically enqueued — must land in the audit
@@ -178,8 +189,10 @@ class TimelineDispatcher:
             # joining nodes are idle from the resize instant; a
             # departing node's clocks retire with their accumulated
             # stats (they stay in the registry for end-of-run
-            # aggregation).  Batches are placed by earliest-free over
-            # the live pool.
+            # aggregation).  Batches are placed by the configured
+            # cn_router policy over the live pool.
+            for c in self.cn_cpu[e.n_cn:]:   # CN shrink: remember when
+                self._retire_s[id(c)] = ev.time_s
             self.cn_cpu = fit_clocks(self.cn_cpu, e.n_cn, "cn_cpu",
                                      ev.time_s, self._clocks)
             self.cn_nic = fit_clocks(self.cn_nic, e.n_cn, "cn_nic",
@@ -259,6 +272,59 @@ class TimelineDispatcher:
                 continue
             return None, None
         return None, None
+
+    # --------------------------------------------------------- routing
+    def _outstanding(self, i: int, now: float) -> int:
+        """Bookings on CN ``i``'s clocks (cpu/nic/gpu) not yet finished
+        at ``now``.  FIFO clocks have nondecreasing interval ends, so a
+        reverse scan stops at the first finished one."""
+        n = 0
+        for clocks in (self.cn_cpu, self.cn_nic, self.cn_gpu):
+            for iv in reversed(clocks[i].intervals):
+                if iv.end > now:
+                    n += 1
+                else:
+                    break
+        return n
+
+    def _route_cn(self, now: float) -> int:
+        """Pick the CN for the next batch per ``ClusterConfig.cn_router``.
+        Ties break to the lowest index on every policy (``min`` over the
+        index range) — routing is deterministic by construction.
+
+        - ``cpu_free`` (legacy default): earliest-free preprocess core;
+          bitwise-identical to the historical placement.
+        - ``pipeline_free``: earliest point where the CN's *whole*
+          pipeline (cpu, gather NIC, GPU) has drained — sees the per-CN
+          NIC/GPU backlogs the cpu clock is blind to.
+        - ``least_outstanding``: fewest uncommitted bookings across the
+          CN's three clocks at ``now`` (join-shortest-queue).
+        """
+        policy = self.eng.cfg.cn_router
+        if policy == "pipeline_free":
+            def key(i):
+                return max(self.cn_cpu[i].free_at,
+                           self.cn_nic[i].free_at,
+                           self.cn_gpu[i].free_at)
+        elif policy == "least_outstanding":
+            def key(i):
+                return self._outstanding(i, now)
+        else:                        # cpu_free
+            def key(i):
+                return self.cn_cpu[i].free_at
+        return min(range(len(self.cn_cpu)), key=key)
+
+    def _pool_pressure(self) -> Tuple[float, float]:
+        """Per-node accumulated queueing seconds of each pool over the
+        *live* clocks — the binding-pool attribution signal the
+        decoupled SLA controller consumes.  CN pressure folds the cpu,
+        gather-NIC, and GPU queues; MN pressure the memory buses."""
+        cn = (sum(c.queue_s for c in self.cn_cpu)
+              + sum(c.queue_s for c in self.cn_nic)
+              + sum(c.queue_s for c in self.cn_gpu))
+        mn = sum(c.queue_s for c in self.mn_bus)
+        return (cn / max(1, len(self.cn_cpu)),
+                mn / max(1, len(self.mn_bus)))
 
     # --------------------------------------------------------- serving
     def _stage_account(self, mem_j: np.ndarray,
@@ -464,10 +530,16 @@ class TimelineDispatcher:
                 [idx, -np.ones_like(idx[:1]).repeat(pad, 0)])
 
         scale = b.size / cfg.batch_size
-        task = min(range(len(self.cn_cpu)),
-                   key=lambda i: self.cn_cpu[i].free_at)
-        pre_start, pre_done = self.cn_cpu[task].reserve(
-            now, st.t_pre * scale, b.bid)
+        # plan-then-commit: peek the pre stage without booking, inject
+        # any events due by mn_start, and only commit the pre on the CN
+        # that survives them.  (Booking up front would leave a phantom
+        # busy interval on a CN a shrink retires mid-window — and the
+        # superseded booking would advance free_at past the abort's
+        # start, so the FIFO clock could never take the charge back.)
+        task = self._route_cn(now)
+        cpu = self.cn_cpu[task]
+        pre_start = cpu.peek(now)
+        pre_done = pre_start + st.t_pre * scale  # reserve's exact chain
         chain_ready = pre_done + st.t_comm_in * scale
         mn_start = max(chain_ready, self.window.floor())
 
@@ -475,18 +547,22 @@ class TimelineDispatcher:
         # MN stage begins: re-route first, then execute
         self._inject(mn_start)
         # a CN shrink landing inside the G_P/scatter window may have
-        # retired the chosen CN: hand the batch off to a survivor and
-        # redo its pre stage there
+        # retired the chosen CN: charge the superseded pre's in-flight
+        # prefix to the retired clock as an abort (mirroring _mn_abort)
+        # and hand the batch off to a survivor
         while task >= len(self.cn_cpu):
+            t_ret = self._retire_s.get(id(cpu), mn_start)
+            cpu.charge_abort(pre_start, min(pre_done, t_ret), b.bid)
             st = self.st
-            task = min(range(len(self.cn_cpu)),
-                       key=lambda i: self.cn_cpu[i].free_at)
-            pre_start, pre_done = self.cn_cpu[task].reserve(
-                now, st.t_pre * scale, b.bid)
+            task = self._route_cn(now)
+            cpu = self.cn_cpu[task]
+            pre_start = cpu.peek(now)
+            pre_done = pre_start + st.t_pre * scale
             chain_ready = pre_done + st.t_comm_in * scale
             mn_start = max(chain_ready, self.window.floor())
             self._inject(mn_start)
         st = self.st
+        cpu.book(now, pre_start, pre_done, b.bid)
         self.window.wait_s += mn_start - chain_ready
         # per-query queueing delay: arrival -> first batch admission
         # (the instant its first part starts preprocessing).  Charged
@@ -587,9 +663,14 @@ class TimelineDispatcher:
                     # feed the SLA loop; emitted resizes join the live
                     # queue and apply at the next batch boundary
                     for act in self.controller.observe(
-                            self.part_done[q.qid], lat):
+                            self.part_done[q.qid], lat,
+                            pressure=self._pool_pressure()):
                         self._enqueue(act)
                         self.sla_actions += 1
+                        if act.n_cn is not None:
+                            self.sla_actions_cn += 1
+                        if act.m_mn is not None:
+                            self.sla_actions_mn += 1
 
     def _drain_due(self, upto: Optional[float]) -> None:
         """Form every batch whose flush deadline has passed."""
@@ -695,6 +776,10 @@ class TimelineDispatcher:
             hedges=e.hedges,
             hedge_wins=e.hedge_wins,
             sla_actions=self.sla_actions,
+            sla_actions_cn=self.sla_actions_cn,
+            sla_actions_mn=self.sla_actions_mn,
+            sla_window_filled=(self.controller is None
+                               or self.controller.window_filled),
             resource_busy_s=r_busy,
             resource_queue_s=r_queue,
             resource_util=r_util,

@@ -198,6 +198,38 @@ def test_stats_fold_mismatch_raises(sane):
         clocksan.verify_run([c], stats=bad)
 
 
+def test_phantom_pre_commit_on_retired_cn_raises(sane):
+    """The same batch tag committed (non-aborted) on two cn_cpu
+    incarnations is the retired-CN phantom-booking signature: the
+    handoff must abort the superseded pre, never leave it committed."""
+    a = ResourceClock("cn_cpu:1")       # retired incarnation
+    a.book(0.0, 0.0, 1.0, tag=5)
+    b = ResourceClock("cn_cpu:0")       # survivor redid the pre
+    b.book(0.0, 0.0, 1.0, tag=5)
+    with pytest.raises(ClockSanError, match="phantom"):
+        clocksan.verify_run([a, b])
+    # the correct shape — superseded interval aborted — passes
+    clocksan.reset()
+    a2 = ResourceClock("cn_cpu:1")
+    a2.charge_abort(0.0, 1.0, tag=5)
+    b2 = ResourceClock("cn_cpu:0")
+    b2.book(0.0, 0.0, 1.0, tag=5)
+    clocksan.verify_run([a2, b2])
+
+
+def test_cn_shrink_handoff_sanitizes_clean(sane):
+    """A CN shrink landing inside a batch's G_P/scatter window (the
+    handoff-abort path) serves with zero findings: the superseded pre
+    on the retired clock is an abort, busy time conserved."""
+    eng0, _, _ = _serve(1, n=24, seed=11, gap_s=0.0)
+    tr = next(t for t in eng0.last_trace[:-1] if t.task == 1)
+    eng, res, stats = _serve(1, n=24, seed=11, gap_s=0.0,
+                             events=[Resize(tr.mn_start, n_cn=1)])
+    assert stats.resizes == 1 and stats.completed == len(res)
+    assert any(iv.aborted for c in eng.last_resources
+               if c.name == "cn_cpu:1" for iv in c.intervals)
+
+
 def test_audit_completeness(sane):
     clocksan.verify_run([], audit=["a", "b"], n_audit_expected=2)
     with pytest.raises(ClockSanError, match="audit"):

@@ -186,6 +186,28 @@ def _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed):
         prev_qps = stats.throughput_qps
 
 
+def _check_cn_router_score_invariance(n_cn, m_mn, depth, seed):
+    """Issue #9: the CN router policy decides placement between
+    identical CNs — it moves batches in time, never values.  Every
+    policy scores bitwise-identically to the legacy cpu_free router on
+    the same stream, and completes everything."""
+    from repro.serving.cluster import CN_ROUTERS
+    reqs = _requests(12, seed)
+    base = None
+    for router in CN_ROUTERS:
+        eng = ClusterEngine(MODEL, PARAMS, ClusterConfig(
+            n_cn=n_cn, m_mn=m_mn, batch_size=8, n_replicas=2,
+            inflight_depth=depth, cn_router=router))
+        res, stats = eng.serve(reqs)
+        assert stats.completed == len(reqs)
+        if base is None:
+            base = {r.rid: r.outputs for r in res}
+        else:
+            for r in res:
+                assert np.array_equal(r.outputs, base[r.rid]), \
+                    (router, r.rid)
+
+
 # --------------------------------------------------------- property form
 @settings(max_examples=10, deadline=None)
 @given(n_cn=st.integers(1, 3), m_mn=st.integers(2, 5),
@@ -226,6 +248,13 @@ def test_pipeline_depth_invariance_random_streams(n_cn, m_mn, depth, seed):
     _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed)
 
 
+@settings(max_examples=10, deadline=None)
+@given(n_cn=st.integers(1, 4), m_mn=st.integers(2, 5),
+       depth=st.integers(1, 8), seed=st.integers(0, 999))
+def test_cn_router_score_invariance_random_streams(n_cn, m_mn, depth, seed):
+    _check_cn_router_score_invariance(n_cn, m_mn, depth, seed)
+
+
 # ------------------------------------------------- pinned-config fallback
 @pytest.mark.parametrize("n_cn,m_mn,nrep,nmp_count", [
     (1, 2, 1, 0), (2, 4, 2, 2), (3, 5, 2, 5), (2, 3, 1, 1),
@@ -259,3 +288,10 @@ def test_cache_bitwise_and_bytes_pinned(alpha, cache_mb, policy,
 ])
 def test_pipeline_depth_invariance_pinned(n_cn, m_mn, depth, seed):
     _check_pipeline_depth_invariance(n_cn, m_mn, depth, seed)
+
+
+@pytest.mark.parametrize("n_cn,m_mn,depth,seed", [
+    (2, 4, 1, 0), (2, 4, 4, 7), (1, 3, 2, 13), (3, 5, 8, 42),
+])
+def test_cn_router_score_invariance_pinned(n_cn, m_mn, depth, seed):
+    _check_cn_router_score_invariance(n_cn, m_mn, depth, seed)

@@ -329,6 +329,107 @@ def test_midstage_abort_charges_the_right_resource(depth):
     assert _scores_equal(res2, res)
 
 
+def test_cn_shrink_handoff_aborts_retired_pre():
+    """A CN shrink landing inside the G_P/scatter window hands the
+    batch's pre stage off to a survivor.  The superseded pre interval on
+    the retired CN cpu clock must be charged as an abort (mirroring
+    ``_mn_abort``) — never left committed, which would double-count the
+    pre work in ``resource_busy_s`` via the ``fit_clocks`` registry."""
+    eng0, res0, _ = _serve(1, n=24, seed=11, gap_s=0.0)
+    # pick an offer-formed batch routed to CN 1 (the final batch is
+    # deadline-flushed: _drain_due injects at the flush deadline before
+    # running it, so a resize timed there never lands mid-batch)
+    tr = next(t for t in eng0.last_trace[:-1] if t.task == 1)
+    eng, res, stats = _serve(1, n=24, seed=11, gap_s=0.0,
+                             events=[Resize(tr.mn_start, n_cn=1)])
+    assert stats.resizes == 1
+    assert _scores_equal(res, res0)
+    cpu_clocks = [c for c in eng.last_resources
+                  if c.name.startswith("cn_cpu")]
+    # each batch commits its pre stage on exactly one CN incarnation
+    committed = {}
+    for c in cpu_clocks:
+        for iv in c.intervals:
+            if iv.tag >= 0 and not iv.aborted:
+                assert iv.tag not in committed, (
+                    f"tag {iv.tag} pre-committed on both "
+                    f"{committed[iv.tag]} and {c.name}")
+                committed[iv.tag] = c.name
+    # and the retired incarnation carries the superseded pre as an
+    # abort, truncated at the shrink instant
+    retired = [iv for c in cpu_clocks if c.name == "cn_cpu:1"
+               for iv in c.intervals if iv.aborted]
+    assert retired, "superseded pre on the retired CN was not aborted"
+    assert all(iv.end <= tr.mn_start + 1e-12 for iv in retired)
+
+
+# ---------------------------------------------------------- CN routing
+def _burst_requests(n, seed, burst=12, gap_between=2e-4):
+    """Arrival bursts with idle gaps: the stream shape that separates
+    the routing policies (inside a burst the cpu clocks tie, so the
+    legacy router is blind to downstream backlog)."""
+    rng = np.random.RandomState(seed)
+    sizes = QueryDist(mean_size=4.0, max_size=12).sample(rng, n)
+    reqs, t = [], 0.0
+    for i, s in enumerate(sizes):
+        if i and i % burst == 0:
+            t += gap_between
+        b = dlrm_batch(CFG, int(s), rng)
+        reqs.append(Request(i, {"dense": b["dense"],
+                                "indices": b["indices"]},
+                            int(s), t))
+    return reqs
+
+
+def test_cn_router_default_is_cpu_free_bitwise():
+    """``cn_router`` defaults to the legacy cpu_free policy: an explicit
+    cpu_free run is bitwise-identical to an unconfigured one — and still
+    hits the depth-1 golden, so the default config reproduces HEAD."""
+    import dataclasses
+    _, res_d, st_d = _serve(1, n=24, seed=11, gap_s=0.0004)
+    _, res_e, st_e = _serve(1, n=24, seed=11, gap_s=0.0004,
+                            cn_router="cpu_free")
+    assert _scores_equal(res_d, res_e)
+    assert [r.latency for r in res_d] == [r.latency for r in res_e]
+    assert dataclasses.asdict(st_d) == dataclasses.asdict(st_e)
+    digest = float(np.sum([np.sum(r.outputs) for r in res_e]))
+    assert digest == pytest.approx(GOLDEN_D1["digest"], rel=0, abs=0)
+
+
+def test_cn_router_unknown_rejected():
+    with pytest.raises(ValueError, match="cn_router"):
+        _serve(1, cn_router="fastest")
+
+
+def _burst_serve(router, seed, slow=4000):
+    """Two CNs over a deliberately slow MN pool (scan times comparable
+    to the burst period, as in test_clocksan's throttled runs) so the
+    per-CN gather/dense backlog is what sets the tail."""
+    eng = _engine(4, n_cn=2, m_mn=2, max_wait_s=2e-5, cn_router=router,
+                  mn_types=["ddr_mn"] * 2)
+    eng.mn_bw = [bw / slow for bw in eng.mn_bw]
+    res, stats = eng.serve(_burst_requests(64, seed))
+    return res, stats
+
+
+@pytest.mark.parametrize("seed", [3, 7, 11, 13, 42])
+def test_pipeline_free_lowers_p99_under_bursts(seed):
+    """The tentpole claim: routing on the whole cpu/nic/gpu pipeline
+    drain strictly lowers p99 over the cpu-only policy once downstream
+    backlog dominates (depth >= 2, bursty arrivals) — while scores stay
+    bitwise-identical (placement moves time, never values)."""
+    res_c, st_c = _burst_serve("cpu_free", seed)
+    res_p, st_p = _burst_serve("pipeline_free", seed)
+    assert st_p.p99 < st_c.p99, (seed, st_c.p99, st_p.p99)
+    key = lambda r: r.rid
+    assert _scores_equal(sorted(res_c, key=key), sorted(res_p, key=key))
+    # least_outstanding also serves the burst to completion with the
+    # same values (its tail is workload-dependent, not pinned)
+    res_l, st_l = _burst_serve("least_outstanding", seed)
+    assert st_l.completed == st_c.completed == 64
+    assert _scores_equal(sorted(res_c, key=key), sorted(res_l, key=key))
+
+
 # ------------------------------------------------- saturation goldens
 SWEEP_DEPTHS = (1, 2, 4, 8)
 

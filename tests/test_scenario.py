@@ -636,6 +636,21 @@ def test_topology_inflight_depth_serde_and_validation():
                 spec.topology, inflight_depth=2.5)).validate()
 
 
+def test_topology_cn_router_serde_and_validation():
+    spec = _burst_spec(2)
+    assert spec.topology.cn_router == "cpu_free"
+    routed = dataclasses.replace(
+        spec, topology=dataclasses.replace(
+            spec.topology, cn_router="pipeline_free"))
+    rt = ScenarioSpec.from_json(routed.to_json())
+    assert rt == routed and rt.topology.cn_router == "pipeline_free"
+    assert routed.topology.cluster_config().cn_router == "pipeline_free"
+    with pytest.raises(ValueError):
+        dataclasses.replace(
+            spec, topology=dataclasses.replace(
+                spec.topology, cn_router="fastest")).validate()
+
+
 @pytest.mark.parametrize("events", [
     (FailMN(2e-6, mn=1),),
     (FailMN(2e-6, mn=2), RecoverMN(1e-4, mn=2)),

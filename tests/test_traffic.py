@@ -316,6 +316,93 @@ def test_sla_controller_unit_convergence():
     assert all(a.time_s >= 0 for a in acts)
 
 
+def test_sla_controller_no_double_step_on_stale_window():
+    """The stale-window bugfix: emission clears the p99 window, so with
+    cooldown < window a sustained breach steps once per *window* of
+    fresh completions — never twice on the same stale measurements
+    before the resize's effect shows."""
+    cfg = SLAControllerConfig(sla_p99_s=0.010, window=4, cooldown=2,
+                              step=1, max_scale=8)
+    c = SLAController(cfg, n_cn=1, m_mn=1)
+    acts = []
+    emitted_at = []
+    for i in range(16):
+        got = c.observe(0.001 * i, 0.050)
+        acts += got
+        if got:
+            emitted_at.append(i)
+    # one step per full window of post-action completions: 16 breaches
+    # at window=4 is exactly 4 actions (the buggy cadence was every
+    # cooldown=2 completions — 7 actions and a badly overshot pool)
+    assert len(acts) == 4, acts
+    assert (c.n_cn, c.m_mn) == (5, 5)
+    assert all(b - a >= cfg.window
+               for a, b in zip(emitted_at, emitted_at[1:]))
+
+
+def test_sla_controller_decoupled_binding_pool_attribution():
+    """Decoupled mode scales the pool whose per-node queueing pressure
+    dominates: CN-bound tails buy CNs, scan-bound tails buy MNs, and
+    only a genuinely mixed tail (pressures within mix_band) buys both.
+    Emitted events carry only the dims that change."""
+    cfg = SLAControllerConfig(sla_p99_s=0.010, window=2, cooldown=0,
+                              step=1, max_scale=4, mode="decoupled")
+    c = SLAController(cfg, n_cn=2, m_mn=2)
+    def breach_until_act(pressure):
+        for i in range(8):
+            got = c.observe(0.0, 0.050, pressure=pressure)
+            if got:
+                return got[0]
+        raise AssertionError("no action fired")
+    # compute-bound tail: CN-only partial resize
+    act = breach_until_act((10.0, 1.0))
+    assert (act.n_cn, act.m_mn) == (3, None)
+    assert (c.n_cn, c.m_mn) == (3, 2)
+    # scan/bus-bound tail: MN-only partial resize
+    act = breach_until_act((1.0, 10.0))
+    assert (act.n_cn, act.m_mn) == (None, 3)
+    assert (c.n_cn, c.m_mn) == (3, 3)
+    # genuinely mixed (within the mix_band factor): both pools step
+    act = breach_until_act((5.0, 6.0))
+    assert (act.n_cn, act.m_mn) == (4, 4)
+    # recovery releases both pools toward their floors
+    acts = []
+    for i in range(20):
+        acts += c.observe(0.0, 0.001, pressure=(10.0, 1.0))
+    assert (c.n_cn, c.m_mn) == (2, 2)
+    assert acts and all(a.n_cn is not None and a.m_mn is not None
+                        for a in acts)
+
+
+def test_sla_decoupled_scores_bitwise_with_coupled():
+    """The controller mode moves capacity and time, never values:
+    coupled and decoupled runs of the same crowd score identically."""
+    spec = preset("flash_crowd")
+    coupled = run_scenario(spec)
+    dec = run_scenario(dataclasses.replace(spec, sla_mode="decoupled"))
+    assert dec.bitwise_equal(coupled)
+    assert dec.stats.sla_window_filled
+
+
+def test_sla_window_filled_stat_and_warning():
+    """A run shorter than the controller window must say so instead of
+    silently doing nothing: sla_window_filled goes False and the report
+    carries a warning line."""
+    spec = ScenarioSpec(
+        name="t", topology=smoke_topology(),
+        workload=Workload(requests=8, mean_size=4.0, max_size=12,
+                          gap_s=0.001, seed=3),
+        sla_p99_s=1e-6)             # default window=32 > 8 completions
+    rep = run_scenario(spec)
+    assert rep.stats.sla_actions == 0
+    assert rep.stats.sla_window_filled is False
+    assert any("window never filled" in ln for ln in rep.summary())
+    # no controller attached: vacuously filled, no warning
+    plain = run_scenario(dataclasses.replace(spec, sla_p99_s=None))
+    assert plain.stats.sla_window_filled is True
+    assert not any("window never filled" in ln for ln in plain.summary())
+
+
 def test_sla_controller_config_validation():
     with pytest.raises(ValueError):
         SLAControllerConfig(sla_p99_s=0.0) and SLAController(
