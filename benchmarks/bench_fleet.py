@@ -1,0 +1,190 @@
+"""Fleet consolidation: two models on one shared pool vs isolated pools.
+
+Two experiments over the fleet serving subsystem (``serving.fleet``):
+
+1. **Consolidation** — RM1 and RM2 each served alone on an isolated
+   {1 CN, 2 MN} pool (3 nodes each, 6 total), then together as a fleet
+   on one shared {2 CN, 3 MN} pool (5 nodes) at the same per-model
+   arrival rate.  Each model's per-model SLA target is set to 1.25x its
+   isolated p99; the bench asserts the shared pool holds BOTH models'
+   targets while provisioning fewer node-seconds than the isolated
+   pools combined — the DisaggRec consolidation argument: disaggregated
+   resources pool across models, so the fleet rides one shared
+   provisioning margin instead of two private ones.
+
+2. **Single-model parity** — the same scenario expressed through the
+   legacy singular ``model`` field and as a one-entry ``models`` fleet.
+   ``ScenarioSpec.__post_init__`` normalizes both to the same value, so
+   the runs must be bitwise-identical: scores AND the full report
+   (every ClusterStats field, per-model breakdown included).
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serving.scenario import (ModelRef, ScenarioSpec, Topology,
+                                    Workload, run_scenario)
+
+from benchmarks.common import row
+
+SEED = 11
+GAP_S = 2e-3              # per-model mean inter-arrival
+SLA_MARGIN = 1.25         # per-model target = margin x isolated p99
+ISO_TOPO = dict(n_cn=1, m_mn=2, batch_size=32, max_wait_s=2e-4,
+                n_replicas=2, cache_mb=0.05)
+SHARED_TOPO = dict(n_cn=2, m_mn=3, batch_size=32, max_wait_s=2e-4,
+                   n_replicas=2, cache_mb=0.05)
+
+
+def _nodes(topo: dict) -> int:
+    return topo["n_cn"] + topo["m_mn"]
+
+
+def _node_seconds(spec: ScenarioSpec, rep) -> float:
+    """Total node capacity provisioned over the run (CN + MN),
+    integrated across the audit trail — resizes the SLA controllers
+    emit count against the pool that emitted them."""
+    st = rep.stats
+    n, m = spec.topology.n_cn, spec.topology.m_mn
+    t, total = 0.0, 0.0
+    for r in st.events:
+        tt = min(max(r.time_s, t), st.makespan_s)
+        total += (n + m) * (tt - t)
+        t, n, m = tt, r.n_cn, r.m_mn
+    return total + (n + m) * max(0.0, st.makespan_s - t)
+
+
+def _iso_spec(arch: str, n: int) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=f"fleet-iso-{arch}",
+        model=ModelRef(arch=arch),
+        topology=Topology(**ISO_TOPO),
+        workload=Workload(requests=n, gap_s=GAP_S, seed=SEED))
+
+
+def consolidation(n: int) -> dict:
+    iso = {}
+    for arch in ("rm1", "rm2"):
+        rep = run_scenario(_iso_spec(arch, n))
+        if rep.completed != rep.total:
+            raise AssertionError(
+                f"isolated {arch} dropped queries: "
+                f"{rep.completed}/{rep.total}")
+        iso[arch] = rep
+        row(f"fleet_iso_{arch}_p99_us", rep.stats.p99 * 1e6,
+            f"{arch} alone on {{{ISO_TOPO['n_cn']} CN, "
+            f"{ISO_TOPO['m_mn']} MN}} ({n} reqs)")
+
+    slas = {a: SLA_MARGIN * iso[a].stats.p99 for a in iso}
+    shared = ScenarioSpec(
+        name="fleet-shared",
+        models=tuple(ModelRef(arch=a, rate_share=0.5,
+                              sla_p99_s=slas[a])
+                     for a in ("rm1", "rm2")),
+        topology=Topology(**SHARED_TOPO),
+        # half the aggregate gap = each model at its isolated rate
+        workload=Workload(requests=2 * n, gap_s=GAP_S / 2, seed=SEED))
+    rep = run_scenario(shared)
+    if rep.completed != rep.total:
+        raise AssertionError(
+            f"shared pool dropped queries: {rep.completed}/{rep.total}")
+    for a in ("rm1", "rm2"):
+        ms = rep.stats.per_model[a]
+        row(f"fleet_shared_{a}_p99_us", ms.p99 * 1e6,
+            f"{a} on the shared pool: {ms.completed}/{ms.queries} "
+            f"completed, SLA {slas[a] * 1e6:.1f}us, "
+            f"{ms.cache_hits} cache hits")
+        if not ms.p99 <= slas[a]:
+            raise AssertionError(
+                f"shared pool missed {a}'s SLA: p99 {ms.p99:g} > "
+                f"target {slas[a]:g}")
+
+    nodes_iso = 2 * _nodes(ISO_TOPO)
+    nodes_shared = _nodes(SHARED_TOPO)
+    row("fleet_nodes_shared", nodes_shared,
+        f"shared pool vs {nodes_iso} across isolated pools")
+    if not nodes_shared <= nodes_iso:
+        raise AssertionError(
+            f"shared pool uses {nodes_shared} nodes, isolated pools "
+            f"{nodes_iso}")
+    ns_iso = sum(_node_seconds(_iso_spec(a, n), iso[a]) for a in iso)
+    ns_shared = _node_seconds(shared, rep)
+    row("fleet_node_seconds_shared", ns_shared,
+        f"vs {ns_iso:.4f} node-s across isolated pools "
+        f"(-{100 * (1 - ns_shared / ns_iso):.1f}%)")
+    if not ns_shared < ns_iso:
+        raise AssertionError(
+            f"consolidation bought no capacity: shared {ns_shared:g} "
+            f"node-s vs isolated {ns_iso:g}")
+    return {
+        "iso": {a: {"p99_us": iso[a].stats.p99 * 1e6} for a in iso},
+        "shared": {a: {"p99_us": rep.stats.per_model[a].p99 * 1e6,
+                       "sla_us": slas[a] * 1e6,
+                       "queries": rep.stats.per_model[a].queries}
+                   for a in ("rm1", "rm2")},
+        "nodes": {"iso": nodes_iso, "shared": nodes_shared},
+        "node_seconds": {"iso": ns_iso, "shared": ns_shared},
+    }
+
+
+def single_model_parity(n: int) -> dict:
+    """A one-entry fleet spec and the legacy singular-model spec are the
+    same value after ``__post_init__`` normalization — their runs must
+    match bitwise on scores and on the full report."""
+    legacy = ScenarioSpec(
+        name="fleet-parity",
+        model=ModelRef(arch="rm1"),
+        topology=Topology(**ISO_TOPO),
+        workload=Workload(requests=n, gap_s=GAP_S, seed=SEED))
+    as_fleet = ScenarioSpec(
+        name="fleet-parity",
+        models=(ModelRef(arch="rm1"),),
+        topology=Topology(**ISO_TOPO),
+        workload=Workload(requests=n, gap_s=GAP_S, seed=SEED))
+    if legacy != as_fleet:
+        raise AssertionError(
+            "one-model fleet spec did not normalize to the legacy spec")
+    rep_a, rep_b = run_scenario(legacy), run_scenario(as_fleet)
+    if not rep_a.bitwise_equal(rep_b):
+        raise AssertionError("one-model fleet broke score parity")
+    da = json.dumps(rep_a.to_dict(), sort_keys=True)
+    db = json.dumps(rep_b.to_dict(), sort_keys=True)
+    if da != db:
+        raise AssertionError(
+            "one-model fleet report differs from the legacy run")
+    row("fleet_parity_p99_us", rep_a.stats.p99 * 1e6,
+        f"one-model fleet bitwise-identical to the legacy path "
+        f"({n} reqs, full report compared)")
+    return {"p99_us": rep_a.stats.p99 * 1e6, "bitwise": True}
+
+
+def run(smoke: bool = False) -> dict:
+    n = 48 if smoke else 160
+    return {
+        "consolidation": consolidation(n),
+        "parity": single_model_parity(n),
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized runs (same assertions)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="dump the consolidation results as a JSON "
+                        "artifact")
+    args = p.parse_args(argv)
+    out = run(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[bench_fleet] results written to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

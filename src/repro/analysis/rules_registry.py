@@ -139,48 +139,53 @@ def check_registry_sync(project: Project) -> Iterable[Finding]:
                 f"TimelineDispatcher — firing it would silently no-op")
 
 
+STATS_CLASSES = ("ClusterStats", "ModelStats")
+
+
 @register("stats-drift",
-          "every ClusterStats field reaches serialization and the docs "
-          "table")
+          "every ClusterStats/ModelStats field reaches serialization "
+          "and the docs table")
 def check_stats_drift(project: Project) -> Iterable[Finding]:
-    hits = project.find_classes("ClusterStats")
-    if not hits:
-        return
-    mod, cls = hits[0]
-    fields = [s.target.id for s in cls.body
-              if isinstance(s, ast.AnnAssign)
-              and isinstance(s.target, ast.Name)]
+    for stats_cls in STATS_CLASSES:
+        hits = project.find_classes(stats_cls)
+        if not hits:
+            continue
+        mod, cls = hits[0]
+        fields = [s.target.id for s in cls.body
+                  if isinstance(s, ast.AnnAssign)
+                  and isinstance(s.target, ast.Name)]
 
-    # serialization check: union of keywords over all ClusterStats(...)
-    # call sites (timeline.run populates every field explicitly)
-    kw_union: Set[str] = set()
-    call_sites = 0
-    for m in project.modules:
-        for node in ast.walk(m.tree):
-            if (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Name)
-                    and node.func.id == "ClusterStats"
-                    and node.keywords):
-                call_sites += 1
-                kw_union |= {k.arg for k in node.keywords if k.arg}
-    if call_sites:
-        for f in fields:
-            if f not in kw_union:
-                yield Finding(
-                    mod.rel, cls.lineno, "stats-drift",
-                    f"ClusterStats.{f} is never passed at any "
-                    f"ClusterStats(...) call site — the field would "
-                    f"report its default forever")
+        # serialization check: union of keywords over all
+        # <StatsClass>(...) call sites (timeline.run populates every
+        # field explicitly)
+        kw_union: Set[str] = set()
+        call_sites = 0
+        for m in project.modules:
+            for node in ast.walk(m.tree):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id == stats_cls
+                        and node.keywords):
+                    call_sites += 1
+                    kw_union |= {k.arg for k in node.keywords if k.arg}
+        if call_sites:
+            for f in fields:
+                if f not in kw_union:
+                    yield Finding(
+                        mod.rel, cls.lineno, "stats-drift",
+                        f"{stats_cls}.{f} is never passed at any "
+                        f"{stats_cls}(...) call site — the field would "
+                        f"report its default forever")
 
-    docs = project.root / "docs" / "architecture.md"
-    if docs.is_file():
-        text = docs.read_text()
-        for f in fields:
-            if not re.search(rf"\b{re.escape(f)}\b", text):
-                yield Finding(
-                    mod.rel, cls.lineno, "stats-drift",
-                    f"ClusterStats.{f} is missing from the "
-                    f"docs/architecture.md field table")
+        docs = project.root / "docs" / "architecture.md"
+        if docs.is_file():
+            text = docs.read_text()
+            for f in fields:
+                if not re.search(rf"\b{re.escape(f)}\b", text):
+                    yield Finding(
+                        mod.rel, cls.lineno, "stats-drift",
+                        f"{stats_cls}.{f} is missing from the "
+                        f"docs/architecture.md field table")
 
 
 def _add_argument_dests(mod: Module) -> List[Tuple[int, str]]:

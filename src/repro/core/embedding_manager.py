@@ -68,10 +68,21 @@ class HotnessCounter:
     NMP, measured rather than assumed.  The same classification
     (``hot_tables``: above-median access density) feeds cache admission
     priorities.
+
+    ``owners`` (per-tid group id, e.g. the owning model of a fleet)
+    scopes the median cut per group: without it, one model's heavy
+    traffic raises the global median and silently demotes every other
+    model's genuinely-hot tables to cold — the classic shared-pool
+    attribution bug. ``owners=None`` is the single-group (single-model)
+    behavior, unchanged.
     """
 
-    def __init__(self, n_tables: int):
+    def __init__(self, n_tables: int,
+                 owners: Optional[Sequence[int]] = None):
         self.lookups = [0.0] * n_tables
+        if owners is not None and len(owners) != n_tables:
+            raise ValueError(f"{len(owners)} owners for {n_tables} tables")
+        self.owners = list(owners) if owners is not None else None
 
     def update(self, tids: Sequence[int], counts: Sequence[float]) -> None:
         for t, c in zip(tids, counts):
@@ -93,16 +104,43 @@ class HotnessCounter:
             out[t.tid] = self.lookups[t.tid] * t.dim * t.dtype_bytes
         return out
 
+    def owner_totals(self, tables: Sequence[TableInfo]) -> Dict[int, float]:
+        """Measured access bytes summed per owner group (0 for all tables
+        when no ``owners`` were given) — the cache-budget rebalance signal."""
+        out: Dict[int, float] = {}
+        for t in tables:
+            o = self.owners[t.tid] if self.owners is not None else 0
+            out[o] = out.get(o, 0.0) + self.lookups[t.tid] * t.dim * t.dtype_bytes
+        return out
+
     def hot_tables(self, tables: Sequence[TableInfo]) -> Optional[Set[int]]:
         """Tables with above-median measured access density (the same
-        cut ``allocate_heterogeneous`` uses); None on cold start."""
+        cut ``allocate_heterogeneous`` uses); None on cold start.
+
+        With ``owners`` the median is taken within each owner group, so
+        hotness is relative to the table's own model's traffic."""
         ab = self.measured_access_bytes(tables)
         if ab is None:
             return None
-        dens = sorted(ab[t.tid] / max(t.size_bytes, 1) for t in tables)
-        cut = dens[len(dens) // 2] if dens else 0.0
-        return {t.tid for t in tables
-                if ab[t.tid] / max(t.size_bytes, 1) > cut}
+        hot: Set[int] = set()
+        for group in _owner_groups(tables, self.owners):
+            dens = sorted(ab[t.tid] / max(t.size_bytes, 1) for t in group)
+            cut = dens[len(dens) // 2] if dens else 0.0
+            hot |= {t.tid for t in group
+                    if ab[t.tid] / max(t.size_bytes, 1) > cut}
+        return hot
+
+
+def _owner_groups(tables: Sequence[TableInfo],
+                  owners: Optional[Sequence[int]]) -> List[List[TableInfo]]:
+    """Partition tables by owner id (one group when owners is None),
+    in ascending owner order for determinism."""
+    if owners is None:
+        return [list(tables)]
+    by: Dict[int, List[TableInfo]] = {}
+    for t in tables:
+        by.setdefault(owners[t.tid], []).append(t)
+    return [by[o] for o in sorted(by)]
 
 
 def compute_n_replicas(tables: Sequence[TableInfo], capacities: Sequence[int]) -> int:
@@ -179,7 +217,8 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
                            capacities: Sequence[int],
                            mn_types: Sequence[str],
                            n_replicas: Optional[int] = None,
-                           access_bytes: Optional[Sequence[float]] = None
+                           access_bytes: Optional[Sequence[float]] = None,
+                           table_groups: Optional[Sequence[int]] = None
                            ) -> Allocation:
     """Node-type-aware placement for a mixed DDR/NMP pool (paper §NMP).
 
@@ -198,6 +237,12 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
     measured_access_bytes``) replaces each table's assumed
     ``avg_pooling``-derived access profile with measured traffic, so
     the hot/cold classification follows the live workload.
+
+    ``table_groups`` (per-tid owner id, e.g. the owning model of a
+    fleet) scopes the hot/cold median cut within each group, exactly
+    mirroring ``HotnessCounter.hot_tables``: a fleet's heavy model must
+    not push every other model's tables below the global median and off
+    DDR. One group (or None) reproduces the historical classification.
     """
     m = len(capacities)
     if len(mn_types) != m:
@@ -215,12 +260,16 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
         return (access_bytes[t.tid] if access_bytes is not None
                 else t.access_bytes)
 
-    dens = sorted(_ab(t) / max(t.size_bytes, 1) for t in tables)
-    hot_cut = dens[len(dens) // 2] if dens else 0.0
+    cuts: Dict[int, float] = {}
+    for group in _owner_groups(tables, table_groups):
+        dens = sorted(_ab(t) / max(t.size_bytes, 1) for t in group)
+        cut = dens[len(dens) // 2] if dens else 0.0
+        for t in group:
+            cuts[t.tid] = cut
     used = [0] * m
     replicas: Dict[int, List[int]] = {}
     for t in sorted(tables, key=lambda t: -t.size_bytes):
-        hot = _ab(t) / max(t.size_bytes, 1) > hot_cut
+        hot = _ab(t) / max(t.size_bytes, 1) > cuts[t.tid]
         pref = "ddr" if hot else "nmp"
         other = "nmp" if pref == "ddr" else "ddr"
         chosen: List[int] = []
@@ -234,6 +283,29 @@ def allocate_heterogeneous(tables: Sequence[TableInfo],
             used[dest] += t.size_bytes
         replicas[t.tid] = sorted(chosen)
     return Allocation(replicas=replicas, mn_used=used, n_replicas=nrep)
+
+
+def allocate_fleet(tables: Sequence[TableInfo],
+                   capacities: Sequence[int],
+                   mn_types: Sequence[str],
+                   owners: Sequence[int],
+                   n_replicas: Optional[int] = None,
+                   access_bytes: Optional[Sequence[float]] = None
+                   ) -> Allocation:
+    """Shared-table placement for a multi-model fleet on one MN pool.
+
+    All models' tables (global tid space, ``owners[tid]`` = owning
+    model) are placed together on the single pool — hot-on-DDR /
+    capacity-on-NMP with the hot/cold median taken *within each model*,
+    replicas class-preserving across models.  A fleet of one is exactly
+    ``allocate_heterogeneous``.
+    """
+    if len(owners) != len(tables):
+        raise ValueError(f"{len(owners)} owners for {len(tables)} tables")
+    return allocate_heterogeneous(tables, capacities, mn_types,
+                                  n_replicas=n_replicas,
+                                  access_bytes=access_bytes,
+                                  table_groups=owners)
 
 
 def allocate_incremental(tables: Sequence[TableInfo],

@@ -40,17 +40,28 @@ class Batch:
     # query's payload rows out of the fused batch (split queries appear in
     # several batches; their contributions are consumed FIFO)
     parts: List[Tuple[Query, int]] = field(default_factory=list)
+    # owning model under fleet serving (0 for single-model streams)
+    model: int = 0
 
 
 class Batcher:
-    """Split/fuse incoming queries into fixed-size batches."""
+    """Split/fuse incoming queries into fixed-size batches.
 
-    def __init__(self, batch_size: int, max_wait_s: float = 0.005):
+    Under fleet serving each model gets its own ingress Batcher; `model`
+    tags the emitted batches and `bid_start`/`bid_step` stride the batch
+    id space so ids stay globally unique across per-model batchers (the
+    defaults reproduce the single-batcher id sequence exactly).
+    """
+
+    def __init__(self, batch_size: int, max_wait_s: float = 0.005,
+                 model: int = 0, bid_start: int = 0, bid_step: int = 1):
         self.batch_size = batch_size
         self.max_wait = max_wait_s
+        self.model = model
         self._pending: List[Tuple[Query, int]] = []   # (query, remaining)
         self._pending_since: Optional[float] = None
-        self._next_bid = 0
+        self._next_bid = bid_start
+        self._bid_step = bid_step
 
     def offer(self, q: Query, now: float) -> List[Batch]:
         """Add a query; return any batches that became full."""
@@ -103,6 +114,7 @@ class Batcher:
         # remainder's deadline already in the past and drain loops would
         # emit degenerate partial batches instead of waiting max_wait_s
         self._pending_since = now if kept else None
-        b = Batch(self._next_bid, members, now, used, parts)
-        self._next_bid += 1
+        b = Batch(self._next_bid, members, now, used, parts,
+                  model=self.model)
+        self._next_bid += self._bid_step
         return b

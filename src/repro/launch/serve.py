@@ -43,6 +43,13 @@ def spec_from_flags(args) -> ScenarioSpec:
     flag combinations are now just a preset builder over the scenario
     API."""
     mn_types = tuple(parse_mn_types(args.mn_type, args.mns))
+    if args.models:
+        archs = [a.strip() for a in args.models.split(",") if a.strip()]
+        models = tuple(ModelRef(arch=a, reduced=args.reduced,
+                                init_seed=args.seed) for a in archs)
+    else:
+        models = (ModelRef(arch=args.arch, reduced=args.reduced,
+                           init_seed=args.seed),)
     events = []
     if args.fail_mn is not None:
         events.append(FailMN(0.001 * args.requests / 2, mn=args.fail_mn))
@@ -60,8 +67,7 @@ def spec_from_flags(args) -> ScenarioSpec:
     return ScenarioSpec(
         name="cli",
         description="scenario assembled from repro.launch.serve flags",
-        model=ModelRef(arch=args.arch, reduced=args.reduced,
-                       init_seed=args.seed),
+        models=models,
         topology=Topology(
             n_cn=args.cns, m_mn=args.mns, batch_size=args.batch,
             n_replicas=args.replicas, use_kernel=args.use_kernel,
@@ -100,6 +106,11 @@ def _print_report(rep) -> None:
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="rm1")
+    p.add_argument("--models", default=None, metavar="A,B",
+                   help="comma list of archs to serve as a fleet on one "
+                        "shared pool (cluster mode), e.g. 'rm1,rm2' — "
+                        "overrides --arch; rates split evenly and "
+                        "per-model stats report on the shared pool")
     p.add_argument("--reduced", action="store_true", default=True)
     p.add_argument("--full", dest="reduced", action="store_false")
     p.add_argument("--requests", type=int, default=32)
@@ -193,7 +204,12 @@ def main(argv=None):
     if cfg.family == "dlrm":
         if args.cluster:
             spec = spec_from_flags(args)
-            rep = run_scenario(spec, model=model, params=params)
+            if len(spec.models) > 1:
+                # fleet specs build their own models (the single
+                # prebuilt model/params pair can't cover the fleet)
+                rep = run_scenario(spec)
+            else:
+                rep = run_scenario(spec, model=model, params=params)
             _print_report(rep)
         else:
             qd = QueryDist(mean_size=8.0, max_size=4 * args.batch,

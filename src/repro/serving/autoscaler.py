@@ -229,6 +229,19 @@ class SLAController:
         """Current sliding-window p99 (nan until anything completed)."""
         return nearest_rank(list(self._lats), 99)
 
+    def sync_pool(self, n_cn: int, m_mn: int) -> None:
+        """Align the controller's internal pool view with the actual
+        live pool, clamped to this controller's [min, max] bounds.
+
+        A lone controller never needs this — its own emissions are the
+        only pool movements, so the view tracks by construction.  Under
+        fleet serving several controllers share one pool: the dispatcher
+        calls this on every applied Resize so a controller whose peer
+        (or a scheduled event) moved the pool steps relative to reality
+        instead of its stale view."""
+        self.n_cn = max(self.min_cn, min(int(n_cn), self.max_cn))
+        self.m_mn = max(self.min_mn, min(int(m_mn), self.max_mn))
+
     def observe(self, t_done_s: float, latency_s: float,
                 pressure: Optional[Tuple[float, float]] = None
                 ) -> List[Resize]:

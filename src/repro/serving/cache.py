@@ -19,6 +19,15 @@ victim is always drawn from the lowest priority class first, and a cold
 row is refused admission rather than displace a hot resident — so a cold
 capacity-table scan cannot flush the hot working set.
 
+Fleet partitioning: under multi-model serving one CN cache is shared by
+every model's lookup stream, so an aggressive model could flush the
+others' hot rows.  ``set_partitions`` installs a per-model byte budget
+(tid -> owning model, model -> budget bytes): each admission is charged
+to the owning model's partition and evicts only within it, and
+``rebalance`` re-installs new budgets mid-run (shrinking partitions
+shed their coldest residents immediately).  Without partitions the
+cache behaves exactly as before.
+
 Coherence: the cache stores *bitwise copies* of authoritative MN rows,
 so serving a hit is numerically indistinguishable from re-fetching; what
 must be protocol-correct is residency.  ``invalidate_table`` drops every
@@ -91,6 +100,9 @@ class RowCache:
         self._hot: Optional[Set[int]] = None              # hot table ids
         self._n_by_pri = {0: 0, 1: 0}
         self._rows_by_table: Dict[int, int] = {}
+        self._owner_of: Optional[Dict[int, int]] = None   # tid -> model
+        self._budgets: Dict[int, int] = {}                # model -> bytes
+        self._bytes_by_part: Dict[int, int] = {}
 
     # ------------------------------------------------------------ introspection
     def __len__(self) -> int:
@@ -132,6 +144,53 @@ class RowCache:
         if self._hot is None:
             return 1
         return 1 if tid in self._hot else 0
+
+    # -------------------------------------------------------------- partitions
+    def _part(self, tid: int) -> Optional[int]:
+        if self._owner_of is None:
+            return None
+        return self._owner_of.get(tid)
+
+    def partition_bytes(self, part: int) -> int:
+        """Resident bytes currently charged to one partition."""
+        return self._bytes_by_part.get(part, 0)
+
+    def set_partitions(self, owner_of: Optional[Dict[int, int]],
+                       budgets: Optional[Dict[int, int]]) -> int:
+        """Install per-model byte budgets (fleet serving).
+
+        ``owner_of`` maps table id -> partition (model) id, ``budgets``
+        maps partition id -> byte budget; a tid without an owner is only
+        bounded by the global capacity.  ``None`` for both disables
+        partitioning.  Residents are re-attributed, and any partition
+        now over budget sheds rows immediately; returns rows evicted.
+        """
+        if (owner_of is None) != (budgets is None):
+            raise ValueError("owner_of and budgets must be set together")
+        self._owner_of = dict(owner_of) if owner_of is not None else None
+        self._bytes_by_part = {}
+        if self._owner_of is not None:
+            for tid, _ in self._entries:
+                p = self._part(tid)
+                if p is not None:
+                    self._bytes_by_part[p] = (self._bytes_by_part.get(p, 0)
+                                              + self.row_bytes)
+        return self.rebalance(budgets or {})
+
+    def rebalance(self, budgets: Dict[int, int]) -> int:
+        """Re-install partition budgets mid-run (the fleet rebalance
+        hook): partitions shrunk below their residency shed their
+        lowest-priority rows now.  Returns rows evicted."""
+        self._budgets = {int(p): int(b) for p, b in budgets.items()}
+        evicted = 0
+        for p in sorted(self._budgets):
+            budget = self._budgets[p]
+            while self._bytes_by_part.get(p, 0) > budget:
+                if not (self._evict_one(max_pri=0, part=p)
+                        or self._evict_one(max_pri=1, part=p)):
+                    break
+                evicted += 1
+        return evicted
 
     # ------------------------------------------------------------------ probes
     def probe(self, tid: int, row: int) -> bool:
@@ -179,6 +238,17 @@ class RowCache:
             self.stats.rejects += 1
             return False
         pri = self._pri(tid)
+        part = self._part(tid)
+        if part is not None and part in self._budgets:
+            budget = self._budgets[part]
+            if budget < self.row_bytes:
+                self.stats.rejects += 1
+                return False
+            while (self._bytes_by_part.get(part, 0) + self.row_bytes
+                   > budget):
+                if not self._evict_one(max_pri=pri, part=part):
+                    self.stats.rejects += 1
+                    return False
         while self.size_bytes + self.row_bytes > self.capacity_bytes:
             if not self._evict_one(max_pri=pri):
                 self.stats.rejects += 1
@@ -189,12 +259,37 @@ class RowCache:
         self._touch[key] = self._tick
         self._n_by_pri[pri] += 1
         self._rows_by_table[tid] = self._rows_by_table.get(tid, 0) + 1
+        if part is not None:
+            self._bytes_by_part[part] = (self._bytes_by_part.get(part, 0)
+                                         + self.row_bytes)
         if self.policy == "lfu":
             heapq.heappush(self._heap, (pri, 1, self._tick, key))
         return True
 
-    def _evict_one(self, max_pri: int) -> bool:
-        """Evict one victim of priority <= max_pri; False if none exists."""
+    def _evict_one(self, max_pri: int, part: Optional[int] = None) -> bool:
+        """Evict one victim of priority <= max_pri; False if none exists.
+        With ``part`` the victim must belong to that partition (scan-based
+        selection: partitions are a fleet feature with no lazy-heap
+        index, and resident counts stay small per CN)."""
+        if part is not None:
+            best = None
+            for key in self._entries:          # recency order (oldest first)
+                if self._part(key[0]) != part:
+                    continue
+                pri = self._pri(key[0])
+                if pri > max_pri:
+                    continue
+                if self.policy == "lru":
+                    best = key                 # oldest eligible wins
+                    break
+                cand = (pri, self._freq[key], self._touch[key], key)
+                if best is None or cand < best:
+                    best = cand
+            if best is None:
+                return False
+            self._drop(best if self.policy == "lru" else best[3])
+            self.stats.evictions += 1
+            return True
         if sum(n for p, n in self._n_by_pri.items() if p <= max_pri) == 0:
             return False
         if self.policy == "lru":
@@ -224,6 +319,13 @@ class RowCache:
         self._touch.pop(key, None)
         self._n_by_pri[self._pri(key[0])] -= 1
         tid = key[0]
+        part = self._part(tid)
+        if part is not None and part in self._bytes_by_part:
+            left_b = self._bytes_by_part[part] - self.row_bytes
+            if left_b > 0:
+                self._bytes_by_part[part] = left_b
+            else:
+                del self._bytes_by_part[part]
         left = self._rows_by_table[tid] - 1
         if left:
             self._rows_by_table[tid] = left
@@ -251,5 +353,6 @@ class RowCache:
         self._heap.clear()
         self._n_by_pri = {0: 0, 1: 0}
         self._rows_by_table.clear()
+        self._bytes_by_part.clear()
         self.stats.invalidations += n
         return n

@@ -195,6 +195,20 @@ class ClusterConfig:
 
 
 @dataclass
+class ModelStats:
+    """Per-model slice of a fleet run's ClusterStats (keyed by model
+    name in ``ClusterStats.per_model``).  Single-model runs carry one
+    entry; percentiles are nearest-rank like the cluster-wide ones."""
+    queries: int
+    completed: int
+    p99: float                    # nan when the model completed nothing
+    queue_wait_p99: float         # arrival -> admission tail, per model
+    cache_hits: int               # hot-row cache hits on this model's tables
+    cache_bytes_saved: float      # gather bytes those hits kept off the NIC
+    sla_actions: int = 0          # Resize events this model's controller emitted
+
+
+@dataclass
 class ClusterStats:
     completed: int
     mean_latency: float           # nan when no query completed
@@ -248,6 +262,10 @@ class ClusterStats:
     resource_queue_s: Dict[str, float] = field(default_factory=dict)
     resource_util: Dict[str, float] = field(default_factory=dict)
     resource_occupancy: Dict[str, float] = field(default_factory=dict)
+    # multi-model fleet serving: per-model breakdown keyed by model
+    # name (one entry for single-model runs — the whole-cluster numbers
+    # restricted to that model's stream)
+    per_model: Dict[str, ModelStats] = field(default_factory=dict)
     # per-event audit trail: serving.timeline.EventRecord entries in
     # fire order — event, fire time, resulting pool shape.  Recoveries,
     # resizes, reloads, and replans all appear here with real virtual-
@@ -256,19 +274,59 @@ class ClusterStats:
 
 
 class ClusterEngine:
-    """Serve a DLRM over {n CN, m MN} with replica-aware routing."""
+    """Serve a DLRM over {n CN, m MN} with replica-aware routing.
+
+    Fleet serving: ``fleet`` is an optional ``[(name, model, params),
+    ...]`` list (first entry = the primary ``model``/``params`` pair)
+    whose members share this engine's CN and MN pools.  Every model's
+    tables map into one global table-id space — model k's local table
+    ``t`` is global tid ``_tbl_off[k] + t`` — so placement, routing,
+    shards, hedging, and the caches all run unchanged over the union;
+    only hot/cold classification and cache budgets are attributed per
+    model.  The shared pool needs a uniform table shape ``(rows, dim)``
+    across members (table *counts* and pooling factors may differ).  A
+    fleet of one is exactly the historical single-model engine."""
 
     def __init__(self, model, params, cfg: Optional[ClusterConfig] = None,
-                 unit_model: Optional[ServingUnitModel] = None):
+                 unit_model: Optional[ServingUnitModel] = None,
+                 fleet: Optional[Sequence[Tuple[str, object, object]]] = None):
         assert model.cfg.family == "dlrm"
         self.model = model
-        self.params = params
         self.cfg = cfg or ClusterConfig()
+        self.fleet = (list(fleet) if fleet is not None
+                      else [(model.cfg.name, model, params)])
+        if fleet is not None and (not self.fleet
+                                  or self.fleet[0][1] is not model):
+            raise ValueError("fleet[0] must be the engine's primary "
+                             "(model, params) pair")
+        self.model_names = [n for n, _, _ in self.fleet]
+        self.n_models = len(self.fleet)
         r = model.cfg.dlrm
-        self.T, self.R, self.D = (r.num_tables, r.rows_per_table,
-                                  r.embed_dim)
-        self.tables = [em.TableInfo(t, self.R, self.D, float(r.avg_pooling))
-                       for t in range(self.T)]
+        self.R, self.D = r.rows_per_table, r.embed_dim
+        self._tbl_off: List[int] = []
+        self._tbl_count: List[int] = []
+        self._tbl_owner: List[int] = []
+        self.tables = []
+        for k, (name, m, _) in enumerate(self.fleet):
+            assert m.cfg.family == "dlrm"
+            rk = m.cfg.dlrm
+            if (rk.rows_per_table, rk.embed_dim) != (self.R, self.D):
+                raise ValueError(
+                    f"fleet model {name!r} has table shape "
+                    f"({rk.rows_per_table}, {rk.embed_dim}); the shared "
+                    f"MN pool needs the uniform shape "
+                    f"({self.R}, {self.D})")
+            off = len(self.tables)
+            self._tbl_off.append(off)
+            self._tbl_count.append(rk.num_tables)
+            self._tbl_owner += [k] * rk.num_tables
+            self.tables += [em.TableInfo(off + t, self.R, self.D,
+                                         float(rk.avg_pooling))
+                            for t in range(rk.num_tables)]
+        self.T = len(self.tables)
+        self._fleet_params = [p for _, _, p in self.fleet]
+        self.params = (params if self.n_models == 1
+                       else self._fleet_embed())
         # live pool sizes — cfg keeps the initial provisioning, these move
         # with resize()
         self.n_cn = self.cfg.n_cn
@@ -285,9 +343,9 @@ class ClusterEngine:
         self.mn_slow = [1.0] * self.m_mn
         self._route_w = [max(self.mn_bw) / bw for bw in self.mn_bw]
         self.capacities = self._pool_capacities(self.m_mn)
-        self.alloc = em.allocate_heterogeneous(
-            self.tables, self.capacities, self.mn_types,
-            n_replicas=self.cfg.n_replicas)
+        self.alloc = self._allocate(self.tables, self.capacities,
+                                    self.mn_types,
+                                    n_replicas=self.cfg.n_replicas)
         self.dead: Set[int] = set()
         self.routing = em.route_greedy(self.tables, self.alloc,
                                        self.n_cn, self.m_mn,
@@ -297,18 +355,27 @@ class ClusterEngine:
             model.cfg, UnitSpec(self.n_cn, self.cfg.cn_type,
                                 self.m_mn, self.cfg.mn_type,
                                 mn_types=tuple(self.mn_types)))
-        self._dense_step = jax.jit(
-            lambda p, d, pooled: jax.nn.sigmoid(
-                model.dense_forward(p, d, pooled)))
+        self._dense_steps = [
+            jax.jit(lambda p, d, pooled, _m=m: jax.nn.sigmoid(
+                _m.dense_forward(p, d, pooled)))
+            for _, m, _ in self.fleet]
+        self._dense_step = self._dense_steps[0]
         # measured per-table hotness: feeds cache admission priorities
-        # and re-allocation (reinit / replan) hot/cold classification
-        self.hotness = em.HotnessCounter(self.T)
+        # and re-allocation (reinit / replan) hot/cold classification.
+        # Under a fleet the counter is owner-scoped, so one model's
+        # traffic cannot demote another model's hot tables.
+        self.hotness = em.HotnessCounter(
+            self.T, owners=(self._tbl_owner if self.n_models > 1
+                            else None))
         # per-CN hot-row caches + the routes their entries were fetched
         # over (the coherence protocol diffs these on every rebuild)
         self.caches: List[RowCache] = self._make_caches(self.n_cn)
         self._cache_routes: List[Dict[int, int]] = []
         self._retired_cache = CacheStats()     # departed CNs' counters
         self.cache_bytes_saved = 0.0
+        # per-model cache attribution (index = fleet position)
+        self.fleet_cache_hits = [0] * self.n_models
+        self.fleet_cache_bytes_saved = [0.0] * self.n_models
         self._batch_cache_s = 0.0              # last batch's probe+hit time
         self._sync_caches()
         # counters / accounting
@@ -337,6 +404,27 @@ class ClusterEngine:
         # call's per-batch trace and resource clocks (serving.pipeline)
         self.last_trace: List = []
         self.last_resources: List = []
+
+    def _fleet_embed(self) -> Dict[str, jnp.ndarray]:
+        """Concatenate the fleet members' embedding banks along the table
+        axis, in fleet order — global tid `_tbl_off[k] + t` indexes model
+        k's local table t directly."""
+        return {"embed": jnp.concatenate(
+            [p["embed"] for p in self._fleet_params], axis=0)}
+
+    def _allocate(self, tables, capacities, mn_types, n_replicas,
+                  access_bytes=None):
+        """Placement dispatch: owner-scoped `allocate_fleet` for a
+        multi-model pool, the historical `allocate_heterogeneous` call
+        (bit-for-bit) for a single model."""
+        if self.n_models > 1:
+            return em.allocate_fleet(
+                tables, capacities, mn_types,
+                [self._tbl_owner[t.tid] for t in tables],
+                n_replicas=n_replicas, access_bytes=access_bytes)
+        return em.allocate_heterogeneous(
+            tables, capacities, mn_types, n_replicas=n_replicas,
+            access_bytes=access_bytes)
 
     def _pool_capacities(self, m_mn: int) -> List[int]:
         """Per-MN shard budget at pool size `m_mn`: the requested
@@ -374,8 +462,38 @@ class ClusterEngine:
         if self.cfg.cache_mb <= 0:
             return []
         budget = int(self.cfg.cache_mb * 1e6)
-        return [RowCache(budget, self.D * 4, self.cfg.cache_policy)
-                for _ in range(n_cn)]
+        caches = [RowCache(budget, self.D * 4, self.cfg.cache_policy)
+                  for _ in range(n_cn)]
+        if self.n_models > 1:
+            owner_of = {tid: o for tid, o in enumerate(self._tbl_owner)}
+            budgets = self._cache_budgets(budget)
+            for c in caches:
+                c.set_partitions(owner_of, budgets)
+        return caches
+
+    def _cache_budgets(self, budget: int) -> Dict[int, int]:
+        """Split one CN's cache byte budget across fleet members in
+        proportion to their measured access bytes (equal split on a cold
+        counter).  The remainder after integer division goes to model 0."""
+        totals = self.hotness.owner_totals(self.tables)
+        grand = sum(totals.values())
+        if grand <= 0.0:
+            budgets = {k: budget // self.n_models
+                       for k in range(self.n_models)}
+        else:
+            budgets = {k: int(budget * (totals.get(k, 0.0) / grand))
+                       for k in range(self.n_models)}
+        budgets[0] += budget - sum(budgets.values())
+        return budgets
+
+    def rebalance_cache_budgets(self) -> int:
+        """Re-split every CN cache's partition budgets to the current
+        per-model traffic mix; returns rows evicted to fit the new
+        budgets.  No-op for a single-model engine."""
+        if self.n_models <= 1 or not self.caches:
+            return 0
+        budgets = self._cache_budgets(int(self.cfg.cache_mb * 1e6))
+        return sum(c.rebalance(budgets) for c in self.caches)
 
     def _sync_caches(self) -> None:
         """Coherence: after any routing rebuild, invalidate in each CN's
@@ -437,9 +555,23 @@ class ClusterEngine:
         """DLRM weight reload: every authoritative row changed, so the
         MN shards re-materialize and every CN cache flushes."""
         self.params = params
+        if self.n_models == 1:
+            self._fleet_params = [params]
         self._build_shards()
         for cache in self.caches:
             cache.flush()
+
+    def reload_seed(self, seed: Optional[int]) -> None:
+        """Seeded weight reload (the ReloadParams event): re-initialize
+        every fleet member's parameters from `seed` (None keeps current
+        weights but still forces the shard rebuild + cache flush)."""
+        if seed is None:
+            self.reload_params(self.params)
+        elif self.n_models == 1:
+            self.reload_params(self.model.init(seed))
+        else:
+            self._fleet_params = [m.init(seed) for _, m, _ in self.fleet]
+            self.reload_params(self._fleet_embed())
 
     def replan_placement(self) -> None:
         """Re-run node-type-aware placement with *measured* hotness (the
@@ -450,7 +582,7 @@ class ClusterEngine:
         would silently shrink the effective replication factor), and
         routing rebuilds / caches invalidate per the moved routes."""
         live = [j for j in range(self.m_mn) if j not in self.dead]
-        sub = em.allocate_heterogeneous(
+        sub = self._allocate(
             self.tables,
             [self.capacities[j] for j in live],
             [self.mn_types[j] for j in live],
@@ -469,6 +601,9 @@ class ClusterEngine:
                                        mn_weights=self._route_w)
         self._build_shards()
         self._sync_caches()
+        # a replan is also the natural moment to re-split the per-model
+        # cache byte budgets to the measured traffic mix (no-op single)
+        self.rebalance_cache_budgets()
 
     # ------------------------------------------------------------ failure
     def fail_mn(self, j: int) -> None:
@@ -489,7 +624,7 @@ class ClusterEngine:
             # full strength under a fresh allocation
             self.reinits += 1
             self.dead.clear()
-            self.alloc = em.allocate_heterogeneous(
+            self.alloc = self._allocate(
                 self.tables, self.capacities, self.mn_types,
                 n_replicas=self.cfg.n_replicas,
                 access_bytes=self.hotness.measured_access_bytes(self.tables))
@@ -646,7 +781,8 @@ class ClusterEngine:
             jnp.asarray(slots)]
         return embedding_bag_ref(stack, jnp.asarray(idx_sub))
 
-    def _execute(self, task: int, dense: np.ndarray, idx: np.ndarray
+    def _execute(self, task: int, dense: np.ndarray, idx: np.ndarray,
+                 model: int = 0
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Scatter -> per-MN pooling -> gather -> DenseNet.
 
@@ -661,11 +797,19 @@ class ClusterEngine:
         pooling math is untouched: cache rows are bitwise copies, so
         the fused bag over the merged hit+miss set in ascending slot
         order IS the uncached computation, and only the byte/time
-        accounting moves."""
+        accounting moves.
+
+        `model` selects the fleet member the batch belongs to: `idx` is
+        indexed by the model's *local* table ids, its lookups touch only
+        the model's global-tid slice, and the dense step runs that
+        member's parameters.  Model 0 of a single-model engine is the
+        historical path bit-for-bit (the slice is the whole pool)."""
+        off = self._tbl_off[model]
+        Tm = self._tbl_count[model]
         shards = em.shard_assignment(self.alloc, self.routing, self.T,
                                      self.m_mn, task)
         B = dense.shape[0]
-        pooled = np.zeros((B, self.T, self.D), np.float32)
+        pooled = np.zeros((B, Tm, self.D), np.float32)
         mem_j = np.zeros(self.m_mn)
         gat_j = np.zeros(self.m_mn)
         row_b = self.D * 4
@@ -674,37 +818,44 @@ class ClusterEngine:
         batch_hit_bytes = 0.0
         self._last_scan = {}
         for j, tids in enumerate(shards):
-            if not tids:
+            # restrict this MN's shard slice to the owning model's tables
+            mtids = [t for t in tids if off <= t < off + Tm]
+            if not mtids:
                 continue
             if j in self.dead:          # stale routing — never expected
                 raise LookupError(f"routing targets dead MN {j}")
-            sub = idx[:, tids, :]
-            pooled[:, tids, :] = np.asarray(self._mn_pool(j, tids, sub))
+            cols = [t - off for t in mtids]
+            sub = idx[:, cols, :]
+            pooled[:, cols, :] = np.asarray(self._mn_pool(j, mtids, sub))
             per_table = (sub >= 0).sum(axis=(0, 2))
             self._last_scan[j] = [(int(t), float(pt) * row_b) for t, pt
-                                  in zip(tids, per_table.tolist())]
-            self.hotness.update(tids, per_table)
+                                  in zip(mtids, per_table.tolist())]
+            self.hotness.update(mtids, per_table)
             nvalid = int(per_table.sum())
             if cache is not None and not self.mn_nmp[j]:
-                hits = self._cache_serve(cache, tids, sub)
+                hits = self._cache_serve(cache, mtids, sub)
                 mem_j[j] = float(nvalid - hits) * row_b
                 gat_j[j] = mem_j[j]
                 self.cache_bytes_saved += float(hits) * row_b
+                # every tid in mtids belongs to `model`, so the whole
+                # shard's hits attribute to it without a per-tid split
+                self.fleet_cache_hits[model] += hits
+                self.fleet_cache_bytes_saved[model] += float(hits) * row_b
                 batch_probes += nvalid
                 batch_hit_bytes += float(hits) * row_b
             elif self.mn_nmp[j]:
                 mem_j[j] = float(nvalid) * row_b
                 live_rows = int((sub >= 0).any(axis=(1, 2)).sum())
-                gat_j[j] = float(live_rows * len(tids)) * row_b
+                gat_j[j] = float(live_rows * len(mtids)) * row_b
             else:
                 mem_j[j] = float(nvalid) * row_b
                 gat_j[j] = mem_j[j]
         # probe tags + hit rows stream from CN HBM on the virtual clock
         self._batch_cache_s = ((batch_probes * hw.CACHE_TAG_BYTES
                                 + batch_hit_bytes) / hw.CN_HBM_BW)
-        scores = np.asarray(self._dense_step(self.params,
-                                             jnp.asarray(dense),
-                                             jnp.asarray(pooled)))
+        scores = np.asarray(self._dense_steps[model](
+            self._fleet_params[model], jnp.asarray(dense),
+            jnp.asarray(pooled)))
         return scores, mem_j, gat_j
 
     # ---------------------------------------------------------- serving
@@ -713,6 +864,7 @@ class ClusterEngine:
               resizes: Sequence[Tuple[float, int, int]] = (),
               events: Sequence = (),
               controller=None,
+              controllers=None,
               ) -> Tuple[List[Result], ClusterStats]:
         """Serve a request stream under a typed event timeline.
 
@@ -737,7 +889,10 @@ class ClusterEngine:
         every completion (virtual finish time, measured latency) and
         enqueues whatever ``Resize`` events it emits into the live
         timeline — the declarative front door builds one when
-        ``ScenarioSpec.sla_p99_s`` is set.
+        ``ScenarioSpec.sla_p99_s`` is set.  ``controllers`` is the fleet
+        form — a ``{model_index: SLAController}`` dict giving each fleet
+        member its own latency window and SLA target over the shared
+        pool (mutually exclusive with ``controller``).
 
         Execution is real JAX; time is a virtual clock advanced with the
         analytic stage model, so latencies are deterministic and
@@ -745,7 +900,8 @@ class ClusterEngine:
         from repro.serving.timeline import TimelineDispatcher, legacy_events
         evs = legacy_events(failures, resizes) + list(events or ())
         return TimelineDispatcher(self, requests, evs,
-                                  controller=controller).run()
+                                  controller=controller,
+                                  controllers=controllers).run()
 
     # ------------------------------------------------------- validation
     def validate_latency_model(self) -> Dict[str, float]:

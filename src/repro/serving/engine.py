@@ -23,6 +23,8 @@ class Request:
     payload: Dict[str, np.ndarray]      # per-sample model inputs
     size: int
     arrival: float
+    # owning model index under fleet serving (0 for single-model streams)
+    model: int = 0
 
 
 @dataclass

@@ -17,7 +17,10 @@ Event types (all carry ``time_s``, the virtual-clock fire time):
 :class:`ReloadParams`     DLRM weight reload (re-init from ``seed``)
 :class:`ReplanPlacement`  re-place tables from *measured* hotness
 :class:`SetWorkload`      mid-stream workload phase change (Zipf alpha,
-                          arrival rate, query-size distribution)
+                          arrival rate, query-size distribution;
+                          ``model=`` scopes it to one fleet model)
+:class:`ShiftTraffic`     move rate share from one fleet model to
+                          another mid-stream (workload evolution)
 ========================  ==============================================
 
 **Ordering guarantees.**  The timeline dispatcher
@@ -133,6 +136,11 @@ class SetWorkload(ScenarioEvent):
     mean_size: Optional[float] = None     # query-size distribution
     sigma: Optional[float] = None
     max_size: Optional[int] = None
+    # fleet scoping: None applies to every model; a model name scopes
+    # the change to that model's stream.  A model-scoped event may not
+    # set gap_s — per-model rate moves only through ShiftTraffic, so
+    # the aggregate arrival rate stays a single knob.
+    model: Optional[str] = None
     kind: ClassVar[str] = "set_workload"
 
 
@@ -149,9 +157,25 @@ class DegradeMN(ScenarioEvent):
     kind: ClassVar[str] = "degrade_mn"
 
 
+@dataclass(frozen=True)
+class ShiftTraffic(ScenarioEvent):
+    """Move ``share`` points of normalized rate share from fleet model
+    ``from_model`` to ``to_model`` at ``time_s`` — the paper's
+    "fast-evolving workloads" story as a timeline event.  The aggregate
+    arrival rate is conserved; only the per-model split moves.  Like
+    ``SetWorkload`` it is consumed when the request stream is built
+    (:func:`repro.serving.fleet.plan_fleet_workload`) and audit-only at
+    dispatch time.  Requires a multi-model spec."""
+    from_model: str = ""
+    to_model: str = ""
+    share: float = 0.0
+    kind: ClassVar[str] = "shift_traffic"
+
+
 EVENT_TYPES: Dict[str, Type[ScenarioEvent]] = {
     c.kind: c for c in (FailMN, RecoverMN, Resize, ReloadParams,
-                        ReplanPlacement, SetWorkload, DegradeMN)
+                        ReplanPlacement, SetWorkload, DegradeMN,
+                        ShiftTraffic)
 }
 
 
@@ -233,6 +257,27 @@ def validate_events(events: Sequence[ScenarioEvent], m_mn: int) -> None:
                                             or ev.max_size < 1):
                 raise ValueError("set_workload max_size must be an "
                                  "integer >= 1")
+            if ev.model is not None and (not isinstance(ev.model, str)
+                                         or not ev.model):
+                raise ValueError(
+                    f"set_workload model must be a non-empty model "
+                    f"name when set, got {ev.model!r}")
+        elif isinstance(ev, ShiftTraffic):
+            for name, v in (("from_model", ev.from_model),
+                            ("to_model", ev.to_model)):
+                if not isinstance(v, str) or not v:
+                    raise ValueError(
+                        f"shift_traffic {name} must be a non-empty "
+                        f"model name, got {v!r}")
+            if ev.from_model == ev.to_model:
+                raise ValueError(
+                    f"shift_traffic moves share from {ev.from_model!r} "
+                    f"to itself")
+            if (not _is_num(ev.share) or not math.isfinite(ev.share)
+                    or not 0.0 < ev.share <= 1.0):
+                raise ValueError(
+                    f"shift_traffic share must be in (0, 1] (normalized "
+                    f"rate-share points), got {ev.share!r}")
         elif isinstance(ev, ReloadParams):
             if ev.seed is not None and not _is_int(ev.seed):
                 raise ValueError(
@@ -263,11 +308,16 @@ def validate_events(events: Sequence[ScenarioEvent], m_mn: int) -> None:
 # ------------------------------------------------------------- the spec
 @dataclass(frozen=True)
 class ModelRef:
-    """Which DLRM the scenario serves (used when ``run_scenario`` is not
-    handed a pre-built model)."""
+    """One DLRM the scenario serves (used when ``run_scenario`` is not
+    handed a pre-built model).  Under a fleet spec (several ModelRefs),
+    ``rate_share`` is the model's relative slice of the aggregate
+    arrival rate (normalized across the fleet) and ``sla_p99_s`` an
+    optional per-model SLA target overriding the spec-level one."""
     arch: str = "rm1"
     reduced: bool = True
     init_seed: int = 0
+    rate_share: float = 1.0
+    sla_p99_s: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -349,10 +399,17 @@ class ScenarioSpec:
 
     Frozen and serde-round-trippable: ``from_json(spec.to_json()) ==
     spec`` for every event type.
+
+    ``models`` is the served fleet; the singular ``model`` is kept as a
+    constructor/serde alias for single-model specs.  ``__post_init__``
+    normalizes the two views (``model is models[0]`` always holds), so
+    a one-model fleet spec and a legacy single-model spec are the same
+    value and run the same bitwise-identical code path.
     """
     name: str
     description: str = ""
-    model: ModelRef = ModelRef()
+    model: Optional[ModelRef] = None
+    models: Tuple[ModelRef, ...] = ()
     topology: Topology = Topology()
     workload: Workload = Workload()
     events: Tuple[ScenarioEvent, ...] = ()
@@ -368,12 +425,26 @@ class ScenarioSpec:
     # partial per-pool Resize events).  Only meaningful with sla_p99_s.
     sla_mode: str = "coupled"
 
+    def __post_init__(self):
+        models = tuple(self.models)
+        if self.model is not None and models:
+            if self.model != models[0]:
+                if len(models) > 1:
+                    raise ValueError(
+                        "give either model (single-model alias) or "
+                        "models (fleet), not conflicting values of both")
+                models = (self.model,)     # dataclasses.replace override
+        elif not models:
+            models = (self.model if self.model is not None else ModelRef(),)
+        object.__setattr__(self, "models", models)
+        object.__setattr__(self, "model", models[0])
+
     # ---------------------------------------------------------- serde
     def to_dict(self) -> Dict[str, Any]:
         d = {
             "name": self.name,
             "description": self.description,
-            "model": dataclasses.asdict(self.model),
+            "models": [_model_ref_dict(m) for m in self.models],
             "topology": {k: (list(v) if isinstance(v, tuple) else v)
                          for k, v in dataclasses.asdict(
                              self.topology).items()},
@@ -391,19 +462,33 @@ class ScenarioSpec:
         d = dict(d)
         if "name" not in d:
             raise ValueError("scenario spec needs a name")
-        known = {"name", "description", "model", "topology", "workload",
-                 "events", "sla_p99_s", "sla_mode"}
+        known = {"name", "description", "model", "models", "topology",
+                 "workload", "events", "sla_p99_s", "sla_mode"}
         unknown = sorted(set(d) - known)
         if unknown:
             raise ValueError(
                 f"unknown scenario section(s): {', '.join(unknown)}")
+        if "model" in d and "models" in d:
+            raise ValueError("give either 'model' (single-model alias) "
+                             "or 'models' (fleet), not both")
+        models: Tuple[ModelRef, ...] = ()
+        model = None
+        if "models" in d:
+            lst = d["models"]
+            if not isinstance(lst, list) or not lst:
+                raise ValueError("models must be a non-empty list of "
+                                 "model refs")
+            models = tuple(_build(ModelRef, m or {}, "models") for m in lst)
+        elif "model" in d:
+            model = _build(ModelRef, d["model"] or {}, "model")
         topo = dict(d.get("topology") or {})
         if topo.get("mn_types") is not None:
             topo["mn_types"] = tuple(topo["mn_types"])
         return cls(
             name=d["name"],
             description=d.get("description", ""),
-            model=_build(ModelRef, d.get("model") or {}, "model"),
+            model=model,
+            models=models,
             topology=_build(Topology, topo, "topology"),
             workload=_build(Workload, d.get("workload") or {}, "workload"),
             events=tuple(event_from_dict(e) for e in d.get("events") or ()),
@@ -510,7 +595,83 @@ class ScenarioSpec:
         if self.sla_mode not in ("coupled", "decoupled"):
             raise ValueError(f"unknown sla_mode {self.sla_mode!r} "
                              f"(known: coupled, decoupled)")
+        for m in self.models:
+            if not isinstance(m.arch, str) or not m.arch:
+                raise ValueError(f"model arch must be a non-empty "
+                                 f"string, got {m.arch!r}")
+            if not isinstance(m.reduced, bool):
+                raise ValueError(f"model reduced must be a bool, "
+                                 f"got {m.reduced!r}")
+            if not _is_int(m.init_seed):
+                raise ValueError(f"model init_seed must be an integer, "
+                                 f"got {m.init_seed!r}")
+            if (not _is_num(m.rate_share) or not math.isfinite(m.rate_share)
+                    or m.rate_share <= 0):
+                raise ValueError(
+                    f"model {m.arch!r} rate_share must be a positive "
+                    f"number, got {m.rate_share!r}")
+            if m.sla_p99_s is not None and (not _is_num(m.sla_p99_s)
+                                            or m.sla_p99_s <= 0):
+                raise ValueError(
+                    f"model {m.arch!r} sla_p99_s must be a positive "
+                    f"number when set, got {m.sla_p99_s!r}")
+        names = [m.arch for m in self.models]
+        if len(set(names)) != len(names):
+            raise ValueError(
+                f"fleet models must have distinct arch names, got {names}")
+        fleet = len(self.models) > 1
+        if fleet and w.arrival == "trace":
+            raise ValueError(
+                "fleet specs derive one arrival process per model; a "
+                "shared timestamp trace cannot be split by rate share "
+                "(use linear/poisson/bursty)")
+        for ev in self.events:
+            if isinstance(ev, SetWorkload) and ev.model is not None:
+                if ev.model not in names:
+                    raise ValueError(
+                        f"set_workload targets unknown model "
+                        f"{ev.model!r} (fleet: {names})")
+                if ev.gap_s is not None:
+                    raise ValueError(
+                        "a model-scoped set_workload may not set gap_s "
+                        "— move per-model rate with shift_traffic")
+            elif isinstance(ev, ShiftTraffic):
+                if not fleet:
+                    raise ValueError(
+                        "shift_traffic needs a multi-model fleet spec")
+                for nm in (ev.from_model, ev.to_model):
+                    if nm not in names:
+                        raise ValueError(
+                            f"shift_traffic targets unknown model "
+                            f"{nm!r} (fleet: {names})")
+        if fleet:
+            # simulate the shift chain: no model's share may go negative
+            total = sum(m.rate_share for m in self.models)
+            shares = {m.arch: m.rate_share / total for m in self.models}
+            for ev in sort_events([e for e in self.events
+                                   if isinstance(e, ShiftTraffic)]):
+                shares[ev.from_model] -= ev.share
+                shares[ev.to_model] += ev.share
+                if shares[ev.from_model] < -1e-12:
+                    raise ValueError(
+                        f"shift_traffic @{ev.time_s:g}s moves "
+                        f"{ev.share:g} share from {ev.from_model!r}, "
+                        f"which only holds "
+                        f"{shares[ev.from_model] + ev.share:g} there")
         validate_events(self.events, t.m_mn)
+
+
+def _model_ref_dict(m: ModelRef) -> Dict[str, Any]:
+    """Serde form of one fleet member: single-model defaults
+    (rate_share 1.0, no per-model SLA) stay out of the JSON so legacy
+    single-model files keep their historical shape."""
+    d: Dict[str, Any] = {"arch": m.arch, "reduced": m.reduced,
+                         "init_seed": m.init_seed}
+    if m.rate_share != 1.0:
+        d["rate_share"] = m.rate_share
+    if m.sla_p99_s is not None:
+        d["sla_p99_s"] = m.sla_p99_s
+    return d
 
 
 def _build(cls, d: Dict[str, Any], section: str):
@@ -710,6 +871,15 @@ class ScenarioReport:
             f"mean {st.queue_wait_mean * 1e3:.3f}ms "
             f"p99 {st.queue_wait_p99 * 1e3:.3f}ms",
         ]
+        if len(st.per_model) > 1:
+            for name, ms in st.per_model.items():
+                lines.append(
+                    f"[scenario] model {name}: {ms.completed}/"
+                    f"{ms.queries} completed, p99 {ms.p99 * 1e3:.3f}ms, "
+                    f"queue-wait p99 {ms.queue_wait_p99 * 1e3:.3f}ms, "
+                    f"{ms.cache_hits} cache hits "
+                    f"({ms.cache_bytes_saved / 1e6:.2f}MB saved), "
+                    f"{ms.sla_actions} SLA action(s)")
         if st.hedges or st.degrades:
             lines.append(
                 f"[scenario] straggler mitigation: {st.degrades} "
@@ -808,8 +978,20 @@ def run_scenario(spec: ScenarioSpec, model=None, params=None, stream=None
     the *same* workload under many topologies (e.g. the cache bench's
     alpha x cache_mb grid), so the seeded stream is built once instead
     of once per point.  The caller owns the invariant that it was
-    planned from an identical workload + ``SetWorkload`` timeline."""
+    planned from an identical workload + ``SetWorkload`` timeline.
+
+    Fleet specs (more than one entry in ``spec.models``) are delegated
+    to :func:`repro.serving.fleet.run_fleet`; a one-model fleet IS a
+    single-model spec (``__post_init__`` normalization) and takes this
+    path unchanged — that is the bitwise-parity guarantee."""
     spec.validate()
+    if len(spec.models) > 1:
+        if model is not None or params is not None or stream is not None:
+            raise ValueError(
+                "fleet specs build their own models and streams; the "
+                "model/params/stream caching hooks are single-model only")
+        from repro.serving.fleet import run_fleet
+        return run_fleet(spec)
     if model is None:
         from repro import configs
         from repro.models import registry
@@ -1013,6 +1195,31 @@ def _preset_spike_plus_failure() -> ScenarioSpec:
     )
 
 
+def _preset_fleet_shift() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fleet_shift",
+        description=(
+            "RM1 and RM2 share one disaggregated pool: each model keeps "
+            "its own ingress batcher and SLA accounting while their "
+            "embedding tables are co-placed on the single MN pool "
+            "(per-model hotness attribution, per-model cache budget "
+            "partitions).  Mid-stream a shift_traffic event moves 30% "
+            "of the aggregate rate from RM1 to RM2 — the paper's "
+            "fast-evolving-workloads story (Fig. 1/14 fleet view) as a "
+            "timeline event; a model-scoped set_workload then skews "
+            "RM2's rows without touching RM1's stream."),
+        models=(ModelRef(arch="rm1", rate_share=0.5),
+                ModelRef(arch="rm2", rate_share=0.5)),
+        topology=smoke_topology(cache_mb=0.05),
+        workload=Workload(requests=48, seed=9),
+        events=(
+            ShiftTraffic(0.032, from_model="rm1", to_model="rm2",
+                         share=0.3),
+            SetWorkload(0.056, alpha=1.05, model="rm2"),
+        ),
+    )
+
+
 PRESETS = {
     "failover_storm": _preset_failover_storm,
     "diurnal_elastic": _preset_diurnal_elastic,
@@ -1021,6 +1228,7 @@ PRESETS = {
     "pipeline_burst": _preset_pipeline_burst,
     "flash_crowd": _preset_flash_crowd,
     "spike_plus_failure": _preset_spike_plus_failure,
+    "fleet_shift": _preset_fleet_shift,
 }
 
 
@@ -1093,6 +1301,16 @@ def main(argv=None) -> int:
               f"requests on {{{spec.topology.n_cn} CN, "
               f"{spec.topology.m_mn} MN}})")
         if args.run:
+            if len(spec.models) > 1:
+                # fleet specs build their own model set (run_fleet);
+                # the single-model cache below doesn't apply
+                rep = run_scenario(spec)
+                for line in rep.summary():
+                    print(line)
+                if rep.completed != rep.total:
+                    raise AssertionError(
+                        f"{path}: {rep.completed}/{rep.total} completed")
+                continue
             key = (spec.model.arch, spec.model.reduced,
                    spec.model.init_seed)
             if key not in models:

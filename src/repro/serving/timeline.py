@@ -80,14 +80,14 @@ from repro.analysis import clocksan
 from repro.core import embedding_manager as em
 from repro.core import hardware as hw
 from repro.core.scheduler import Batch, Batcher, Query
-from repro.serving.cluster import CN_ROUTERS, ClusterStats
+from repro.serving.cluster import CN_ROUTERS, ClusterStats, ModelStats
 from repro.serving.engine import Request, Result
 from repro.serving.pipeline import (AdmissionWindow, BatchTrace, HedgeIssue,
                                     MNPlan, fit_clocks, summarize_resources)
 from repro.serving.scenario import (DegradeMN, FailMN, RecoverMN,
                                     ReloadParams, ReplanPlacement, Resize,
-                                    ScenarioEvent, SetWorkload, _lat_stats,
-                                    sort_events, validate_events)
+                                    ScenarioEvent, SetWorkload, ShiftTraffic,
+                                    _lat_stats, sort_events, validate_events)
 
 
 def legacy_events(failures: Sequence[Tuple[float, int]],
@@ -123,7 +123,8 @@ class TimelineDispatcher:
     engine's virtual clock."""
 
     def __init__(self, engine, requests: Sequence[Request],
-                 events: Sequence[ScenarioEvent], controller=None):
+                 events: Sequence[ScenarioEvent], controller=None,
+                 controllers: Optional[Dict[int, object]] = None):
         self.eng = engine
         if engine.cfg.cn_router not in CN_ROUTERS:
             raise ValueError(
@@ -133,10 +134,19 @@ class TimelineDispatcher:
         self.queue: List[ScenarioEvent] = sort_events(events)
         validate_events(self.queue, engine.m_mn)
         self.audit: List[EventRecord] = []
-        # optional SLA feedback controller
+        # optional SLA feedback controller(s)
         # (serving.autoscaler.SLAController): fed every completion,
-        # its emitted Resize events join the live queue
-        self.controller = controller
+        # emitted Resize events join the live queue.  The fleet form
+        # `controllers` maps model index -> controller, so each model's
+        # latency window and SLA target are tracked independently over
+        # the shared pool; the legacy singular kwarg is the one-entry
+        # dict keyed by model 0.
+        if controller is not None and controllers:
+            raise ValueError("give either controller (single) or "
+                             "controllers (fleet), not both")
+        self.controllers: Dict[int, object] = (
+            dict(controllers) if controllers
+            else ({0: controller} if controller is not None else {}))
         self.sla_actions = 0
         self.sla_actions_cn = 0
         self.sla_actions_mn = 0
@@ -205,10 +215,16 @@ class TimelineDispatcher:
             # starting when the resize fires
             self.mig_end = (max(self.mig_end, ev.time_s)
                             + plan.bytes_moved / hw.NIC_BW)
+            # under multi-controller fleet serving every controller's
+            # internal pool view tracks the shared pool, whichever
+            # controller (or scheduled event) moved it — a single
+            # controller keeps the historical own-emissions-only view
+            if len(self.controllers) > 1:
+                for c in self.controllers.values():
+                    c.sync_pool(e.n_cn, e.m_mn)
             self._record(ev, applied=changed)
         elif isinstance(ev, ReloadParams):
-            e.reload_params(e.model.init(ev.seed) if ev.seed is not None
-                            else e.params)
+            e.reload_seed(ev.seed)
             self._record(ev)
         elif isinstance(ev, ReplanPlacement):
             e.replan_placement()
@@ -220,6 +236,10 @@ class TimelineDispatcher:
                 self._record(ev, applied=changed)
             else:                   # departed via an earlier shrink
                 self._record(ev, applied=False)
+        elif isinstance(ev, ShiftTraffic):
+            # consumed at stream build (fleet.plan_fleet_workload);
+            # audit-trail only at dispatch, like SetWorkload
+            self._record(ev)
         else:       # SetWorkload: consumed at stream build; audit only
             self._record(ev)
 
@@ -270,7 +290,9 @@ class TimelineDispatcher:
                 continue
             if isinstance(ev, SetWorkload):
                 continue
-            return None, None
+            if isinstance(ev, ShiftTraffic):  # stream-build-time event:
+                continue                      # scannable-past, like
+            return None, None                 # SetWorkload
         return None, None
 
     # --------------------------------------------------------- routing
@@ -571,7 +593,9 @@ class TimelineDispatcher:
             if q.qid not in self.first_admit:
                 self.first_admit[q.qid] = pre_start
                 self.queue_waits.append(pre_start - self.arrival[q.qid])
-        scores, mem_j, gat_j = e._execute(task, dense, idx)
+                self.m_queue_waits.setdefault(b.model, []).append(
+                    pre_start - self.arrival[q.qid])
+        scores, mem_j, gat_j = e._execute(task, dense, idx, model=b.model)
         stage_j = self._stage_account(mem_j, gat_j)
         plan = self._mn_plan(task, mn_start, mem_j, gat_j,
                              e._batch_cache_s)
@@ -603,7 +627,8 @@ class TimelineDispatcher:
                 e.mn_gather_bytes += gat_j
                 e.mn_stage_s += stage_j
                 self._mn_abort(task, plan, t_fail, b.bid)
-                scores, mem_j, gat_j = e._execute(task, dense, idx)
+                scores, mem_j, gat_j = e._execute(task, dense, idx,
+                                                  model=b.model)
                 stage_j = self._stage_account(mem_j, gat_j)
                 mn_start = t_fail + cfg.mn_recovery_s
                 plan = self._mn_plan(task, mn_start, mem_j, gat_j,
@@ -657,29 +682,41 @@ class TimelineDispatcher:
                 # the batch that zeroes rows_left need not finish last
                 lat = self.part_done[q.qid] - self.arrival[q.qid]
                 self.latencies.append(lat)
+                self.m_latencies.setdefault(b.model, []).append(lat)
                 self.results.append(Result(
                     q.qid, np.concatenate(self.pieces[q.qid]), lat))
-                if self.controller is not None:
-                    # feed the SLA loop; emitted resizes join the live
-                    # queue and apply at the next batch boundary
-                    for act in self.controller.observe(
+                ctl = self.controllers.get(b.model)
+                if ctl is not None:
+                    # feed the owning model's SLA loop; emitted resizes
+                    # join the live queue and apply at the next batch
+                    # boundary
+                    for act in ctl.observe(
                             self.part_done[q.qid], lat,
                             pressure=self._pool_pressure()):
                         self._enqueue(act)
                         self.sla_actions += 1
+                        self.m_sla_actions[b.model] = (
+                            self.m_sla_actions.get(b.model, 0) + 1)
                         if act.n_cn is not None:
                             self.sla_actions_cn += 1
                         if act.m_mn is not None:
                             self.sla_actions_mn += 1
 
     def _drain_due(self, upto: Optional[float]) -> None:
-        """Form every batch whose flush deadline has passed."""
+        """Form every batch whose flush deadline has passed, earliest
+        deadline first across the per-model batchers (equal deadlines
+        break to the lowest model index — deterministic)."""
         while True:
-            dl = self.batcher.next_deadline()
-            if dl is None or (upto is not None and dl > upto):
+            best: Optional[Tuple[int, float]] = None
+            for k in sorted(self.batchers):
+                dl = self.batchers[k].next_deadline()
+                if dl is not None and (best is None or dl < best[1]):
+                    best = (k, dl)
+            if best is None or (upto is not None and best[1] > upto):
                 return
+            k, dl = best
             self._inject(dl)
-            out = self.batcher.flush(dl)
+            out = self.batchers[k].flush(dl)
             if not out:
                 return
             for b in out:
@@ -688,7 +725,17 @@ class TimelineDispatcher:
     def run(self) -> Tuple[List[Result], ClusterStats]:
         e = self.eng
         cfg = e.cfg
-        self.batcher = Batcher(cfg.batch_size, cfg.max_wait_s)
+        # one ingress batcher per model in the stream (a single-model
+        # stream gets exactly the historical lone batcher: model 0,
+        # bid_start 0, stride 1)
+        models = sorted({r.model for r in self.requests}) or [0]
+        self.batchers = {
+            k: Batcher(cfg.batch_size, cfg.max_wait_s, model=k,
+                       bid_start=i, bid_step=len(models))
+            for i, k in enumerate(models)}
+        self.m_latencies: Dict[int, List[float]] = {}
+        self.m_queue_waits: Dict[int, List[float]] = {}
+        self.m_sla_actions: Dict[int, int] = {}
         e._refresh_hot_tables()    # hotness measured by prior serving
         requests = self.requests
         self.payload = {r.rid: r.payload for r in requests}
@@ -721,7 +768,7 @@ class TimelineDispatcher:
             self._drain_due(req.arrival)
             self._inject(req.arrival)
             q = Query(req.rid, req.arrival, req.size)
-            for b in self.batcher.offer(q, req.arrival):
+            for b in self.batchers[req.model].offer(q, req.arrival):
                 self._run_batch(b, req.arrival)
         self._drain_due(None)
         # events stamped after the last batch deadline still belong to
@@ -741,6 +788,25 @@ class TimelineDispatcher:
         makespan = self.last_done
         r_busy, r_queue, r_util, r_occ = summarize_resources(
             self._clocks, makespan)
+        # per-model breakdown (one entry per fleet member, single-model
+        # runs included — their lone entry mirrors the global fields)
+        n_queries: Dict[int, int] = {}
+        for r in requests:
+            n_queries[r.model] = n_queries.get(r.model, 0) + 1
+        per_model: Dict[str, ModelStats] = {}
+        for k, name in enumerate(e.model_names):
+            m_lats = self.m_latencies.get(k, [])
+            _, _, _, m_p99 = _lat_stats(m_lats)
+            _, _, _, m_qw99 = _lat_stats(self.m_queue_waits.get(k, []))
+            per_model[name] = ModelStats(
+                queries=n_queries.get(k, 0),
+                completed=len(m_lats),
+                p99=m_p99,
+                queue_wait_p99=m_qw99,
+                cache_hits=e.fleet_cache_hits[k],
+                cache_bytes_saved=e.fleet_cache_bytes_saved[k],
+                sla_actions=self.m_sla_actions.get(k, 0),
+            )
         stats = ClusterStats(
             completed=len(self.results),
             mean_latency=mean_lat,
@@ -778,8 +844,9 @@ class TimelineDispatcher:
             sla_actions=self.sla_actions,
             sla_actions_cn=self.sla_actions_cn,
             sla_actions_mn=self.sla_actions_mn,
-            sla_window_filled=(self.controller is None
-                               or self.controller.window_filled),
+            sla_window_filled=all(c.window_filled
+                                  for c in self.controllers.values()),
+            per_model=per_model,
             resource_busy_s=r_busy,
             resource_queue_s=r_queue,
             resource_util=r_util,

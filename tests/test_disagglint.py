@@ -303,6 +303,53 @@ def test_stats_drift_missing_docs_entry(tmp_path):
     assert "docs" in res.findings[0].message
 
 
+# the rule generalizes over STATS_CLASSES: ModelStats (the per-model
+# fleet breakdown) is held to the same serialize-and-document contract
+STATS_MODEL_CLUSTER = """
+    class ModelStats:
+        queries: int
+        p99: float
+
+    class ClusterStats:
+        completed: int
+"""
+STATS_MODEL_TIMELINE = """
+    def run():
+        ms = ModelStats(queries=1, p99=0.0)
+        return ClusterStats(completed=1)
+"""
+STATS_MODEL_DOCS = ("| `completed` | queries |\n"
+                    "| `queries` | per-model count | | `p99` | seconds |\n")
+
+
+def test_stats_drift_model_stats_clean(tmp_path):
+    res = _stats_tree(tmp_path, cluster=STATS_MODEL_CLUSTER,
+                      timeline=STATS_MODEL_TIMELINE,
+                      docs=STATS_MODEL_DOCS)
+    assert res.ok
+
+
+def test_stats_drift_model_stats_missing_kwarg(tmp_path):
+    res = _stats_tree(tmp_path, cluster=STATS_MODEL_CLUSTER,
+                      timeline=STATS_MODEL_TIMELINE.replace(
+                          ", p99=0.0", ""),
+                      docs=STATS_MODEL_DOCS)
+    assert rules_of(res) == ["stats-drift"]
+    assert "ModelStats" in res.findings[0].message
+    assert "p99" in res.findings[0].message
+
+
+def test_stats_drift_model_stats_missing_docs_entry(tmp_path):
+    # docs cover ClusterStats.completed (and, incidentally, the word
+    # "queries") but never mention p99: ModelStats is the class in drift
+    res = _stats_tree(tmp_path, cluster=STATS_MODEL_CLUSTER,
+                      timeline=STATS_MODEL_TIMELINE,
+                      docs="| `completed` | queries |\n")
+    assert rules_of(res) == ["stats-drift"]
+    assert "ModelStats" in res.findings[0].message
+    assert "p99" in res.findings[0].message
+
+
 # ------------------------------------------------------------- cli-sync
 CLI_GOOD = """
     import argparse

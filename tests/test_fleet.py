@@ -1,0 +1,473 @@
+"""Multi-model fleet serving (issue #10): spec serde + normalization,
+single-model bitwise parity, the merged fleet stream (rate shares,
+ShiftTraffic, per-model phases), owner-scoped hotness/placement, cache
+budget partitions, and the shared-pool engine end to end.
+
+The tentpole invariants:
+
+- ``models`` round-trips through serde; the legacy singular ``model``
+  key stays accepted as an alias and the two forms normalize to the
+  same value (``model is models[0]`` always);
+- a one-model fleet spec runs bitwise-identically — scores AND the
+  full ClusterStats — to the same spec expressed through the legacy
+  singular field (the HEAD single-model path);
+- under a fleet, one model's traffic cannot demote another model's hot
+  tables (owner-scoped hotness), and per-model cache partitions hold
+  their byte budgets.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import rm1
+from repro.core import embedding_manager as em
+from repro.models.dlrm import DLRMModel
+from repro.serving.cache import RowCache
+from repro.serving.fleet import (FleetModel, build_fleet,
+                                 plan_fleet_workload, run_fleet)
+from repro.serving.scenario import (ModelRef, ScenarioSpec, SetWorkload,
+                                    ShiftTraffic, Workload, preset,
+                                    run_scenario, smoke_topology)
+
+CFG_A = rm1.CONFIG.replace(
+    name="fleet-a",
+    dlrm=rm1.DLRMConfig(num_tables=5, rows_per_table=48, embed_dim=8,
+                        avg_pooling=4, num_dense_features=8,
+                        bottom_mlp=(16, 8), top_mlp=(32, 16, 1)),
+)
+# a second member with a different table count but the same (rows, dim)
+# — the uniform-shape requirement of the shared MN pool
+CFG_B = CFG_A.replace(
+    name="fleet-b",
+    dlrm=dataclasses.replace(CFG_A.dlrm, num_tables=3, avg_pooling=6),
+)
+
+
+def _tiny_fleet():
+    ma, mb = DLRMModel(CFG_A), DLRMModel(CFG_B)
+    return [FleetModel("rm1", ModelRef(arch="rm1"), ma, ma.init(0)),
+            FleetModel("rm2", ModelRef(arch="rm2"), mb, mb.init(1))]
+
+
+def _fleet_spec(events=(), requests=24, shares=(0.5, 0.5), **wkw):
+    return ScenarioSpec(
+        name="fleet-t",
+        models=(ModelRef(arch="rm1", rate_share=shares[0]),
+                ModelRef(arch="rm2", rate_share=shares[1])),
+        topology=smoke_topology(batch_size=8, cache_mb=0.02),
+        workload=Workload(requests=requests, mean_size=4.0, max_size=12,
+                          gap_s=0.004, **wkw),
+        events=tuple(events))
+
+
+# ------------------------------------------------------------- serde
+def test_models_round_trip():
+    spec = _fleet_spec(events=(
+        ShiftTraffic(0.02, from_model="rm1", to_model="rm2", share=0.2),
+        SetWorkload(0.03, alpha=1.05, model="rm2")))
+    rt = ScenarioSpec.from_json(spec.to_json())
+    assert rt == spec
+    d = spec.to_dict()
+    assert "model" not in d
+    assert [m["arch"] for m in d["models"]] == ["rm1", "rm2"]
+
+
+def test_legacy_singular_model_alias():
+    d = {"name": "t", "model": {"arch": "rm1"},
+         "topology": {}, "workload": {}}
+    spec = ScenarioSpec.from_dict(d)
+    assert spec.models == (ModelRef(arch="rm1"),)
+    assert spec.model == spec.models[0]
+    # serde now emits the plural form; the value round-trips
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+
+
+def test_one_model_fleet_normalizes_to_singular():
+    a = ScenarioSpec(name="t", model=ModelRef(arch="rm1"))
+    b = ScenarioSpec(name="t", models=(ModelRef(arch="rm1"),))
+    assert a == b
+    assert b.model == b.models[0]
+
+
+def test_replace_keeps_normalization():
+    spec = _fleet_spec()
+    moved = dataclasses.replace(spec, sla_p99_s=0.5)
+    assert moved.models == spec.models
+    single = ScenarioSpec(name="t", model=ModelRef(arch="rm1"))
+    swapped = dataclasses.replace(single, model=ModelRef(arch="rm2"))
+    assert swapped.models == (ModelRef(arch="rm2"),)
+
+
+@pytest.mark.parametrize("mutate", [
+    # both keys in one payload
+    lambda d: {**d, "model": {"arch": "rm1"},
+               "models": [{"arch": "rm1"}]},
+    # empty fleet
+    lambda d: {**d, "models": []},
+    lambda d: {**d, "models": "rm1,rm2"},
+])
+def test_serde_garbage_rejected(mutate):
+    base = {"name": "t", "topology": {}, "workload": {}}
+    with pytest.raises((ValueError, TypeError)):
+        ScenarioSpec.from_dict(mutate(base))
+
+
+@pytest.mark.parametrize("build", [
+    # duplicate arch names
+    lambda: ScenarioSpec(
+        name="t", models=(ModelRef(arch="rm1"), ModelRef(arch="rm1")),
+        topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=8)),
+    # non-positive rate share
+    lambda: _fleet_spec(shares=(0.0, 1.0)),
+    # shift naming an unknown model
+    lambda: _fleet_spec(events=(ShiftTraffic(
+        0.01, from_model="rm1", to_model="rm9", share=0.1),)),
+    # shift draining more share than the model holds
+    lambda: _fleet_spec(shares=(0.2, 0.8), events=(ShiftTraffic(
+        0.01, from_model="rm1", to_model="rm2", share=0.9),)),
+    # scoped SetWorkload may not move the rate
+    lambda: _fleet_spec(events=(SetWorkload(
+        0.01, gap_s=0.001, model="rm1"),)),
+    # scoped SetWorkload naming an unknown model
+    lambda: _fleet_spec(events=(SetWorkload(
+        0.01, alpha=1.0, model="rm9"),)),
+    # fleets cannot replay an absolute trace
+    lambda: _fleet_spec(arrival="trace", trace_path="x.json"),
+])
+def test_validate_rejects_bad_fleet(build):
+    spec = build()
+    with pytest.raises(ValueError):
+        spec.validate()
+
+
+def test_shift_on_single_model_rejected():
+    spec = ScenarioSpec(
+        name="t", model=ModelRef(arch="rm1"),
+        topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=8),
+        events=(ShiftTraffic(0.01, from_model="rm1", to_model="rm2",
+                             share=0.1),))
+    with pytest.raises(ValueError):
+        spec.validate()
+
+
+def test_conflicting_model_and_models_rejected():
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="t", model=ModelRef(arch="rm1"),
+                     models=(ModelRef(arch="rm2"),
+                             ModelRef(arch="rm3")))
+
+
+# ----------------------------------------- single-model bitwise parity
+def _stats_equal(a, b) -> bool:
+    return _nan_eq(dataclasses.asdict(a), dataclasses.asdict(b))
+
+
+def _nan_eq(a, b) -> bool:
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(_nan_eq(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return (len(a) == len(b)
+                and all(_nan_eq(x, y) for x, y in zip(a, b)))
+    return a == b
+
+
+PARITY_GRID = [
+    dict(),
+    dict(requests=16, seed=3),
+    dict(alpha=1.05),
+    dict(arrival="poisson", seed=5),
+]
+
+
+def _parity_pair(wkw):
+    topo = smoke_topology(batch_size=8, cache_mb=0.02)
+    w = Workload(requests=wkw.pop("requests", 12), mean_size=4.0,
+                 max_size=12, gap_s=0.004, **wkw)
+    legacy = ScenarioSpec(name="p", model=ModelRef(arch="rm1"),
+                          topology=topo, workload=w)
+    fleet = ScenarioSpec(name="p", models=(ModelRef(arch="rm1"),),
+                         topology=topo, workload=w)
+    return legacy, fleet
+
+
+@pytest.mark.parametrize("wkw", [dict(g) for g in PARITY_GRID])
+def test_one_model_fleet_bitwise_parity_pinned(wkw):
+    """Acceptance: a one-model fleet spec scores bitwise-identically to
+    the legacy single-model path — results AND the full ClusterStats,
+    per-model breakdown included."""
+    legacy, fleet = _parity_pair(dict(wkw))
+    rep_l, rep_f = run_scenario(legacy), run_scenario(fleet)
+    assert rep_l.bitwise_equal(rep_f)
+    assert _stats_equal(rep_l.stats, rep_f.stats)
+    assert len(rep_f.stats.per_model) == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), requests=st.integers(4, 20),
+       alpha=st.sampled_from([0.0, 1.05]))
+def test_one_model_fleet_bitwise_parity_property(seed, requests, alpha):
+    legacy, fleet = _parity_pair(
+        dict(seed=seed, requests=requests, alpha=alpha))
+    rep_l, rep_f = run_scenario(legacy), run_scenario(fleet)
+    assert rep_l.bitwise_equal(rep_f)
+    assert _stats_equal(rep_l.stats, rep_f.stats)
+
+
+# ------------------------------------------------- fleet stream plan
+def test_fleet_stream_rate_shares():
+    spec = _fleet_spec(requests=40, shares=(0.75, 0.25))
+    reqs, phases = plan_fleet_workload(spec, _tiny_fleet())
+    assert len(reqs) == 40
+    assert [r.rid for r in reqs] == list(range(40))
+    # arrivals merged in global time order
+    assert all(a.arrival <= b.arrival for a, b in zip(reqs, reqs[1:]))
+    counts = {0: 0, 1: 0}
+    for r in reqs:
+        counts[r.model] += 1
+    assert counts[0] > 2 * counts[1]        # ~3:1 split
+
+
+def test_shift_traffic_moves_rate():
+    ev = ShiftTraffic(0.05, from_model="rm1", to_model="rm2", share=0.4)
+    spec = _fleet_spec(requests=60, events=(ev,))
+    reqs, phases = plan_fleet_workload(spec, _tiny_fleet())
+    before = [r for r in reqs if r.arrival < ev.time_s]
+    after = [r for r in reqs if r.arrival >= ev.time_s]
+    n_b = sum(1 for r in before if r.model == 1)
+    n_a = sum(1 for r in after if r.model == 1)
+    # rm2 went from 0.5 to 0.9 share: its post-shift fraction must rise
+    assert n_a / max(1, len(after)) > n_b / max(1, len(before))
+    # every event starts a phase with a contiguous rid range
+    assert len(phases) == 2
+    assert phases[0].rid_end == phases[1].rid_start
+    assert phases[1].rid_end == len(reqs)
+
+
+def test_shift_to_zero_silences_model():
+    ev = ShiftTraffic(0.04, from_model="rm1", to_model="rm2", share=0.5)
+    spec = _fleet_spec(requests=40, events=(ev,))
+    reqs, _ = plan_fleet_workload(spec, _tiny_fleet())
+    assert all(r.model == 1 for r in reqs if r.arrival >= ev.time_s)
+
+
+def test_unscoped_gap_change_moves_aggregate_rate():
+    # an unscoped SetWorkload gap_s change realigns EVERY model's
+    # arrival process at the event time
+    ev = SetWorkload(0.04, gap_s=0.001)
+    spec = _fleet_spec(requests=60, events=(ev,))
+    reqs, phases = plan_fleet_workload(spec, _tiny_fleet())
+    assert len(reqs) == 60
+    after = [r.arrival for r in reqs if r.arrival >= ev.time_s]
+    gaps = [b - a for a, b in zip(after, after[1:])]
+    # aggregate gap dropped 0.004 -> 0.001: mean inter-arrival follows
+    assert sum(gaps) / len(gaps) < 0.002
+    assert phases[-1].gap_s == 0.001
+    # both models keep arriving after the realign
+    assert {r.model for r in reqs if r.arrival >= ev.time_s} == {0, 1}
+
+
+def test_scoped_setworkload_only_touches_target():
+    ev = SetWorkload(0.04, mean_size=10.0, model="rm2")
+    spec = _fleet_spec(requests=60, events=(ev,))
+    reqs, _ = plan_fleet_workload(spec, _tiny_fleet())
+    base = _fleet_spec(requests=60)
+    reqs0, _ = plan_fleet_workload(base, _tiny_fleet())
+    # rm1's queries are untouched by rm2's phase change
+    a = [(r.rid, r.size, r.arrival) for r in reqs if r.model == 0]
+    b = [(r.rid, r.size, r.arrival) for r in reqs0 if r.model == 0]
+    assert [x[1:] for x in a] == [x[1:] for x in b]
+    # rm2's post-event sizes moved (mean 10 vs 4)
+    post = [r.size for r in reqs if r.model == 1
+            and r.arrival >= ev.time_s]
+    pre = [r.size for r in reqs0 if r.model == 1
+           and r.arrival >= ev.time_s]
+    assert post != pre
+
+
+# --------------------------------------- owner-scoped hotness (sat. 2)
+def _tables(n, rows=32, dim=8, pool=4):
+    return [em.TableInfo(t, rows, dim, float(pool)) for t in range(n)]
+
+
+def test_hotness_owner_scoped_no_cross_model_eviction():
+    """Regression: model A's heavy traffic must not demote model B's hot
+    tables.  Unscoped, B's densities all fall below the global median
+    cut; owner-scoped, each model keeps its own hot set."""
+    tables = _tables(8)
+    owners = [0, 0, 0, 0, 1, 1, 1, 1]
+    counts = [10000, 100, 100, 100,    # model 0: tid 0 hot
+              50, 1, 1, 1]            # model 1: tid 4 hot (but cold vs A)
+    hot = em.HotnessCounter(len(tables), owners=owners)
+    hot.update(range(8), counts)
+    scoped = hot.hot_tables(tables)
+    assert scoped == {0, 4}            # each model keeps its own hot set
+    flat = em.HotnessCounter(len(tables))
+    flat.update(range(8), counts)
+    unscoped = flat.hot_tables(tables)
+    # the failure mode the scoping fixes: under one global median, B's
+    # entire traffic sits below A's and B loses its hot classification
+    assert unscoped == {0}
+
+
+def test_hotness_owner_totals():
+    tables = _tables(4)
+    hot = em.HotnessCounter(4, owners=[0, 0, 1, 1])
+    hot.update([0, 1, 2, 3], [10, 20, 5, 5])
+    totals = hot.owner_totals(tables)
+    assert totals[0] == 30 * 8 * 4 and totals[1] == 10 * 8 * 4
+
+
+def test_hotness_owners_length_mismatch():
+    with pytest.raises(ValueError):
+        em.HotnessCounter(4, owners=[0, 1])
+
+
+def test_allocate_fleet_owner_scoped_placement():
+    tables = _tables(8, rows=64)
+    owners = [0, 0, 0, 0, 1, 1, 1, 1]
+    # per-model hot/cold split: tid 0 hot within model 0, tid 4 hot
+    # within model 1 (even though 50 sits below the global median)
+    ab = [10000.0, 100.0, 100.0, 100.0, 50.0, 1.0, 1.0, 1.0]
+    cap = [2 * sum(t.size_bytes for t in tables)] * 2
+    alloc = em.allocate_fleet(tables, cap, ["ddr_mn", "nmp_mn"], owners,
+                              n_replicas=1, access_bytes=ab)
+    # each model's hot table (above its own median) lands on DDR
+    for tid in (0, 4):
+        assert alloc.replicas[tid] == [0], f"tid {tid} misplaced"
+    for tid in (1, 2, 3, 5, 6, 7):
+        assert alloc.replicas[tid] == [1], f"tid {tid} misplaced"
+
+
+def test_allocate_fleet_owner_length_mismatch():
+    tables = _tables(4)
+    with pytest.raises(ValueError):
+        em.allocate_fleet(tables, [10 ** 9], ["ddr_mn"], [0, 0, 1],
+                          n_replicas=1)
+
+
+# --------------------------------------- cache partitions (satellite)
+def test_cache_partition_budgets_respected():
+    row_b = 32
+    c = RowCache(10 * row_b, row_b, "lru")
+    c.set_partitions({0: 0, 1: 1}, {0: 6 * row_b, 1: 4 * row_b})
+    for r in range(8):
+        c.admit(0, r)
+        c.admit(1, r)
+    assert c.partition_bytes(0) <= 6 * row_b
+    assert c.partition_bytes(1) <= 4 * row_b
+    assert c.size_bytes <= 10 * row_b
+    # partition 0 evicted its own rows, never partition 1's
+    assert c.table_rows(0) == 6 and c.table_rows(1) == 4
+
+
+def test_cache_rebalance_evicts_to_new_budget():
+    row_b = 32
+    c = RowCache(10 * row_b, row_b, "lru")
+    c.set_partitions({0: 0, 1: 1}, {0: 6 * row_b, 1: 4 * row_b})
+    for r in range(6):
+        c.admit(0, r)
+    evicted = c.rebalance({0: 2 * row_b, 1: 8 * row_b})
+    assert evicted == 4
+    assert c.partition_bytes(0) == 2 * row_b
+    for r in range(8):
+        c.admit(1, r)
+    assert c.table_rows(1) == 8
+
+
+def test_cache_partition_validation():
+    c = RowCache(1024, 32, "lru")
+    with pytest.raises(ValueError):
+        c.set_partitions({0: 0}, None)
+    with pytest.raises(ValueError):
+        c.set_partitions(None, {0: 64})
+
+
+# ---------------------------------------------------- end-to-end run
+def test_run_fleet_end_to_end():
+    spec = _fleet_spec(requests=24, events=(
+        ShiftTraffic(0.04, from_model="rm1", to_model="rm2", share=0.3),))
+    rep = run_fleet(spec, fleet=_tiny_fleet())
+    assert rep.completed == rep.total == 24
+    assert set(rep.stats.per_model) == {"rm1", "rm2"}
+    pm = rep.stats.per_model
+    assert sum(m.queries for m in pm.values()) == 24
+    assert all(m.completed == m.queries for m in pm.values())
+    assert all(np.isfinite(m.p99) for m in pm.values())
+    # the audit trail recorded the shift (audit-only at dispatch)
+    kinds = [r.event.kind for r in rep.stats.events]
+    assert "shift_traffic" in kinds
+
+
+def test_run_fleet_per_model_sla_controllers():
+    base = _fleet_spec(requests=24)
+    spec = ScenarioSpec(
+        name=base.name,
+        models=(ModelRef(arch="rm1", rate_share=0.5, sla_p99_s=10.0),
+                ModelRef(arch="rm2", rate_share=0.5, sla_p99_s=20.0)),
+        topology=base.topology, workload=base.workload)
+    rep = run_fleet(spec, fleet=_tiny_fleet())
+    assert rep.completed == rep.total
+    # generous targets: controllers attach but never act
+    assert rep.stats.sla_actions == 0
+
+
+def test_run_scenario_delegates_fleet_specs():
+    # the front door: a multi-model spec reaches run_fleet, which
+    # builds the real fleet members itself (no injection)
+    spec = ScenarioSpec(
+        name="fleet-front-door",
+        models=(ModelRef(arch="rm1", rate_share=0.5),
+                ModelRef(arch="rm2", rate_share=0.5)),
+        topology=smoke_topology(batch_size=8),
+        workload=Workload(requests=12, mean_size=4.0, max_size=12,
+                          gap_s=0.004))
+    rep = run_scenario(spec)
+    assert rep.completed == rep.total == 12
+    assert set(rep.stats.per_model) == {"rm1", "rm2"}
+
+
+def test_run_fleet_rejects_single_model():
+    spec = ScenarioSpec(name="t", model=ModelRef(arch="rm1"),
+                        topology=smoke_topology(batch_size=8),
+                        workload=Workload(requests=8))
+    with pytest.raises(ValueError):
+        run_fleet(spec)
+
+
+def test_fleet_preset_builds_and_validates():
+    spec = preset("fleet_shift")
+    spec.validate()
+    assert len(spec.models) == 2
+    rt = ScenarioSpec.from_json(spec.to_json())
+    assert rt == spec
+
+
+def test_build_fleet_materializes_members():
+    spec = _fleet_spec(requests=8)
+    members = build_fleet(spec)
+    assert [m.name for m in members] == ["rm1", "rm2"]
+    assert all(m.params is not None for m in members)
+
+
+def test_fleet_uniform_shape_enforced():
+    from repro.serving.cluster import ClusterConfig, ClusterEngine
+    ma = DLRMModel(CFG_A)
+    bad = CFG_A.replace(
+        name="fleet-bad",
+        dlrm=dataclasses.replace(CFG_A.dlrm, embed_dim=16))
+    mb = DLRMModel(bad)
+    with pytest.raises(ValueError):
+        ClusterEngine(ma, ma.init(0),
+                      ClusterConfig(n_cn=1, m_mn=2, batch_size=8),
+                      fleet=[("a", ma, ma.init(0)),
+                             ("b", mb, mb.init(1))])
